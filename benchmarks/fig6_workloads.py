@@ -1,0 +1,41 @@
+"""Paper Fig. 6: total energy vs SemCom task workload (C_n multiples).
+
+Claim: heavier semantic payloads -> higher total energy; FL energy ~flat.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import run_proposed, weights, write_csv
+from repro.core import sample_params
+
+MULTIPLES = (1.0, 2.0, 4.0, 8.0, 16.0)
+BASE_C = 1e6  # "light" workload, paper §V-D
+
+
+def run(quick: bool = True, seed: int = 0):
+    w = weights()
+    rows = []
+    sweep = MULTIPLES[::2] if quick else MULTIPLES
+    for mult in sweep:
+        params = sample_params(
+            jax.random.PRNGKey(seed), C_round_bits=BASE_C * mult, L_rounds=10
+        )
+        rep = run_proposed(params, w)
+        rows.append({"workload_multiple": mult, **rep})
+
+    # mixed per-group workloads (Fig 6a): 5 groups of 2 devices
+    params = sample_params(jax.random.PRNGKey(seed))
+    group_C = np.repeat([1.0, 2.0, 4.0, 8.0, 16.0], 2) * BASE_C * 10
+    import dataclasses
+
+    params = dataclasses.replace(params, C=jnp.asarray(group_C, jnp.float32))
+    rep = run_proposed(params, w)
+    rows.append({"workload_multiple": -1.0, **rep})  # -1 = mixed groups
+    write_csv("fig6_workloads", rows)
+
+    e = [r["energy_semcom"] for r in rows if r["workload_multiple"] > 0]
+    checks = {"semcom_energy_up_with_workload": e[-1] >= e[0]}
+    return rows, checks

@@ -1,0 +1,45 @@
+"""Paper Fig. 8: (a) kappa3 vs chosen compression rate rho; (b) accuracy vs
+rho for two concave fits (YOLOv5 + YOLOv3 stand-in), plus our FL-autoencoder
+re-fit when experiments/bench/ae_accuracy.csv exists (examples/fedsem_autoencoder.py).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from .common import OUT, run_proposed, weights, write_csv
+from repro.core import sample_params
+from repro.core.accuracy import default_accuracy, yolov3_accuracy
+
+KAPPA3 = (0.05, 0.2, 1.0, 5.0, 20.0)
+
+
+def run(quick: bool = True, seed: int = 0):
+    params = sample_params(jax.random.PRNGKey(seed))
+    rows = []
+    sweep = KAPPA3[1:4] if quick else KAPPA3
+    for k3 in sweep:
+        rep = run_proposed(params, weights(k3=k3))
+        rows.append({"kappa3": k3, **rep})
+    write_csv("fig8a_kappa3_rho", rows)
+
+    acc_rows = []
+    for rho in np.linspace(0.05, 1.0, 20):
+        acc_rows.append({
+            "rho": float(rho),
+            "yolov5_fit": float(default_accuracy().value(rho)),
+            "yolov3_fit": float(yolov3_accuracy().value(rho)),
+        })
+    write_csv("fig8b_accuracy_vs_rho", acc_rows)
+
+    rhos = [r["rho"] for r in rows]
+    a5 = [r["yolov5_fit"] for r in acc_rows]
+    checks = {
+        "rho_nondecreasing_in_k3": all(
+            rhos[i + 1] >= rhos[i] - 1e-6 for i in range(len(rhos) - 1)
+        ),
+        "accuracy_concave_increasing": all(
+            a5[i + 1] > a5[i] for i in range(len(a5) - 1)
+        ),
+    }
+    return rows + acc_rows, checks

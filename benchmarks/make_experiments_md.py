@@ -1,0 +1,163 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from artifacts.
+
+  PYTHONPATH=src python -m benchmarks.make_experiments_md
+"""
+from __future__ import annotations
+
+import csv
+import json
+import pathlib
+import re
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DRYRUN = ROOT / "experiments" / "dryrun"
+BENCH = ROOT / "experiments" / "bench"
+
+
+def _fmt(x, nd=2):
+    return f"{x:.{nd}e}" if isinstance(x, float) else str(x)
+
+
+def dryrun_summary() -> str:
+    lines = []
+    for mesh in ("16x16", "pod2x16x16"):
+        recs = []
+        for p in sorted(DRYRUN.glob("*.json")):
+            if len(p.stem.split("__")) != 3:
+                continue
+            r = json.loads(p.read_text())
+            if r.get("mesh") == mesh:
+                recs.append(r)
+        ok = sum(r["status"] == "ok" for r in recs)
+        sk = sum(r["status"] == "skipped" for r in recs)
+        er = sum(r["status"] == "error" for r in recs)
+        chips = 512 if "pod" in mesh else 256
+        lines.append(
+            f"* **{mesh}** ({chips} chips): {ok} pairs lower+compile OK, "
+            f"{sk} skipped by design, {er} errors — out of {len(recs)} recorded."
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(mesh="16x16") -> str:
+    rows = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        if len(p.stem.split("__")) != 3:
+            continue
+        r = json.loads(p.read_text())
+        if r.get("mesh") != mesh:
+            continue
+        rows.append(r)
+    hdr = ("| arch | shape | kind | compute_s | memory_s* | collective_s | "
+           "dominant | HBM GiB | fits | useful-FLOPs |")
+    sep = "|" + "---|" * 10
+    out = [hdr, sep]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | — | "
+                f"{r['status']}: {r.get('reason', '')[:60]} |"
+            )
+            continue
+        rl = r["roofline"]
+        u = r.get("useful_flops_ratio")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {rl['compute_s']:.2e} | {rl['memory_s']:.2e} "
+            f"| {rl['collective_s']:.2e} | {rl['dominant'].replace('_s', '')} "
+            f"| {r['hbm_gib']:.1f} | {'Y' if r['fits_hbm'] else 'N'} "
+            f"| {u:.2f} |"
+        )
+    return "\n".join(out)
+
+
+def paper_results() -> str:
+    out = []
+    t2 = BENCH / "table2_exhaustive.csv"
+    if t2.exists():
+        out.append("### Table II analogue (toy N=4, K=5)\n")
+        out.append("| method | objective | runtime_s |")
+        out.append("|---|---|---|")
+        with open(t2) as f:
+            for row in csv.DictReader(f):
+                out.append(
+                    f"| {row['method']} | {float(row['objective']):.3f} "
+                    f"| {float(row['runtime_s']):.2f} |"
+                )
+        out.append("")
+    f4 = BENCH / "fig4_pmax.csv"
+    if f4.exists():
+        out.append("### Fig. 4 analogue (objective/energy by method x P_max)\n")
+        out.append("| P_max dBm | method | objective | energy J | T_FL s |")
+        out.append("|---|---|---|---|---|")
+        with open(f4) as f:
+            for row in csv.DictReader(f):
+                out.append(
+                    f"| {row['pmax_dbm']} | {row['method']} "
+                    f"| {float(row['objective']):.3f} "
+                    f"| {float(row['energy_total']):.3f} "
+                    f"| {float(row['t_fl']):.3f} |"
+                )
+        out.append("")
+    out.append(
+        "Full CSVs for figs 3/5/6/8 live in `experiments/bench/`; the\n"
+        "pass/fail claim checks are printed by `python -m benchmarks.run`."
+    )
+    return "\n".join(out)
+
+
+def pod_comparison() -> str:
+    """Single-pod vs multi-pod per-device HBM + dominant terms (train/prefill)."""
+    by_key = {}
+    for p in sorted(DRYRUN.glob("*.json")):
+        if len(p.stem.split("__")) != 3:
+            continue
+        r = json.loads(p.read_text())
+        if r["status"] != "ok":
+            continue
+        by_key.setdefault((r["arch"], r["shape"]), {})[r["mesh"]] = r
+    out = [
+        "| arch | shape | HBM GiB 256c | HBM GiB 512c | coll_s 256c | coll_s 512c |",
+        "|---|---|---|---|---|---|",
+    ]
+    for (arch, shape), recs in sorted(by_key.items()):
+        if "16x16" not in recs or "pod2x16x16" not in recs:
+            continue
+        a, b = recs["16x16"], recs["pod2x16x16"]
+        if a["kind"] not in ("train", "prefill"):
+            continue
+        out.append(
+            f"| {arch} | {shape} | {a['hbm_gib']:.1f} | {b['hbm_gib']:.1f} "
+            f"| {a['roofline']['collective_s']:.2e} "
+            f"| {b['roofline']['collective_s']:.2e} |"
+        )
+    out.append(
+        "\nDoubling to 512 chips roughly halves per-device activations/optimizer"
+        " state (batch splits over the pod axis) at the cost of pod-axis"
+        " gradient all-reduce — the dry-run quantifies both sides."
+    )
+    return "\n".join(out)
+
+
+def patch(md: str, marker: str, content: str) -> str:
+    """Replace the region between <!-- X --> and <!-- /X -->."""
+    start, end = f"<!-- {marker} -->", f"<!-- /{marker} -->"
+    assert start in md and end in md, marker
+    pre = md.split(start)[0]
+    post = md.split(end)[1]
+    return pre + start + "\n\n" + content + "\n" + end + post
+
+
+def main():
+    path = ROOT / "EXPERIMENTS.md"
+    md = path.read_text()
+    md = patch(md, "PAPER_RESULTS", paper_results() + "\n")
+    md = patch(md, "DRYRUN_SUMMARY", dryrun_summary() + "\n")
+    md = patch(md, "ROOFLINE_TABLE", roofline_table() + "\n")
+    md = patch(md, "POD_COMPARISON", pod_comparison() + "\n")
+    path.write_text(md)
+    print("EXPERIMENTS.md sections regenerated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Aggregate the dry-run JSONs into the §Roofline table (markdown + CSV)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from .common import OUT, write_csv
+
+DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_records(mesh: str | None = None, baseline_only: bool = True):
+    recs = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        if baseline_only and len(p.stem.split("__")) != 3:
+            continue  # skip --tag'd hillclimb variant records
+        r = json.loads(p.read_text())
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def run(quick: bool = True, mesh: str = "16x16"):
+    recs = load_records(mesh)
+    rows = []
+    for r in recs:
+        row = {
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": r["status"],
+        }
+        if r["status"] == "ok":
+            rl = r["roofline"]
+            row.update({
+                "kind": r["kind"],
+                "compute_s": rl["compute_s"],
+                "memory_s": rl["memory_s"],
+                "collective_s": rl["collective_s"],
+                "dominant": rl["dominant"],
+                "hbm_gib": r["hbm_gib"],
+                "fits_hbm": r["fits_hbm"],
+                "useful_flops_ratio": r.get("useful_flops_ratio"),
+                "fsdp": r.get("fsdp"),
+            })
+        else:
+            row["note"] = r.get("reason") or (r.get("error") or "")[:80]
+        rows.append(row)
+    write_csv(f"roofline_{mesh.replace('x','_')}", rows)
+    ok = [r for r in rows if r["status"] == "ok"]
+    skipped = [r for r in rows if r["status"] == "skipped"]
+    err = [r for r in rows if r["status"] == "error"]
+    checks = {
+        "all_pairs_lower_or_skip": len(err) == 0,
+        "n_ok": len(ok), "n_skipped": len(skipped), "n_error": len(err),
+    }
+    return rows, checks
+
+
+def markdown_table(mesh: str = "16x16") -> str:
+    rows, _ = run(mesh=mesh)
+    hdr = ("| arch | shape | kind | compute_s | memory_s | collective_s | "
+           "dominant | HBM GiB | fits | useful-FLOPs |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                f"{r['status']}: {r.get('note','')} | — | — | — |"
+            )
+            continue
+        ratio = r.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | {r['dominant'].replace('_s','')} "
+            f"| {r['hbm_gib']:.1f} | {'Y' if r['fits_hbm'] else 'N'} "
+            f"| {ratio:.2f} |" if ratio is not None else
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | - | - | - | - | - | - | - |"
+        )
+    return "\n".join(lines)

@@ -1,0 +1,71 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines per benchmark (us_per_call =
+wall time of the benchmark's run; derived = pass/fail summary of the
+paper-claim checks), then a detailed check listing on stderr.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig4]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _modules():
+    from . import (alg_analysis, fig3_weights, fig4_pmax,
+                   fig5_users_subcarriers, fig6_workloads, fig8_accuracy,
+                   table2_exhaustive, roofline_report)
+
+    return {
+        "fig3_weights": fig3_weights,
+        "fig4_pmax": fig4_pmax,
+        "fig5_users_subcarriers": fig5_users_subcarriers,
+        "fig6_workloads": fig6_workloads,
+        "fig8_accuracy": fig8_accuracy,
+        "table2_exhaustive": table2_exhaustive,
+        "alg_analysis": alg_analysis,
+        "roofline_report": roofline_report,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="full sweep grids")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    mods = _modules()
+    if args.only:
+        mods = {k: v for k, v in mods.items() if args.only in k}
+
+    all_checks = {}
+    print("name,us_per_call,derived")
+    for name, mod in mods.items():
+        t0 = time.time()
+        try:
+            rows, checks = mod.run(quick=not args.full)
+            dt_us = (time.time() - t0) * 1e6
+            n_pass = sum(1 for v in checks.values() if v is True)
+            n_check = sum(1 for v in checks.values() if isinstance(v, bool))
+            print(f"{name},{dt_us:.0f},checks={n_pass}/{n_check}")
+            all_checks[name] = checks
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},-1,ERROR:{type(e).__name__}")
+            all_checks[name] = {"exception": str(e)}
+
+    print("\n--- paper-claim checks ---", file=sys.stderr)
+    failures = 0
+    for name, checks in all_checks.items():
+        for k, v in checks.items():
+            status = v if not isinstance(v, bool) else ("PASS" if v else "FAIL")
+            if v is False:
+                failures += 1
+            print(f"{name}.{k}: {status}", file=sys.stderr)
+    if failures:
+        print(f"\n{failures} claim-check failure(s)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""End-to-end FedSem driver (the paper's own pipeline):
+
+  Stage 1 — federated training of the SemCom CNN autoencoder across N
+  simulated devices, with per-round wireless resource allocation (Alg. A2)
+  pricing every round's energy/delay;
+  Stage 2 — evaluate the trained codec at several compression rates rho,
+  re-fit the concave accuracy curve A(rho) = a rho^b from our own
+  measurements (paper Fig. 2 / Fig. 8b analogue), and write it where the
+  benchmarks pick it up.
+
+  PYTHONPATH=src python examples/fedsem_autoencoder.py --rounds 40
+"""
+import argparse
+import csv
+import pathlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.accuracy import fit_power_law
+from repro.data.synthetic import image_batch
+from repro.fl.federated import FLConfig, run_fl
+from repro.semcom.autoencoder import (
+    AEConfig, init_params, mse_loss, proxy_accuracy, psnr,
+)
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "bench"
+
+
+def train_fedsem(rounds: int, rho: float, key):
+    cfg = AEConfig(rho=rho)
+    params = init_params(jax.random.fold_in(key, int(rho * 100)), cfg)
+
+    def loss_fn(p, batch, k):
+        return mse_loss(p, cfg, batch, k)
+
+    def client_batch(k, i):
+        return image_batch(k, 8)
+
+    fl_cfg = FLConfig(rounds=rounds, n_clients=6, n_subcarriers=24,
+                      local_steps=4, lr=0.05, compress=False)
+    params, hist = run_fl(key, params, loss_fn, client_batch, fl_cfg)
+    return cfg, params, hist
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--rhos", type=float, nargs="+",
+                    default=[0.15, 0.3, 0.5, 0.75, 1.0])
+    args = ap.parse_args()
+    key = jax.random.PRNGKey(0)
+    eval_batch = image_batch(jax.random.PRNGKey(99), 32)
+
+    rows = []
+    for rho in args.rhos:
+        # each rho builds fresh jitted closures; XLA-CPU's ORC JIT can fail to
+        # materialize symbols once too many dylibs accumulate in one process
+        jax.clear_caches()
+        cfg, params, hist = train_fedsem(args.rounds, rho, key)
+        acc = float(proxy_accuracy(params, cfg, eval_batch))
+        rows.append({
+            "rho": rho,
+            "final_mse": hist[-1].loss,
+            "psnr_db": float(psnr(params, cfg, eval_batch)),
+            "proxy_accuracy": acc,
+            "fl_energy_total_J": sum(h.energy for h in hist),
+            "fl_time_total_s": sum(h.t_fl for h in hist),
+        })
+        print(f"rho={rho:.2f}  mse={rows[-1]['final_mse']:.4f}  "
+              f"psnr={rows[-1]['psnr_db']:.2f} dB  acc~{acc:.3f}  "
+              f"E={rows[-1]['fl_energy_total_J']:.2f} J")
+
+    fit = fit_power_law(
+        jnp.asarray([r["rho"] for r in rows]),
+        jnp.asarray([max(r["proxy_accuracy"], 1e-3) for r in rows]),
+    )
+    print(f"\nre-fitted A(rho) = {float(fit.a):.4f} * rho^{float(fit.b):.4f} "
+          f"(paper: 0.6356 * rho^0.4025)")
+
+    OUT.mkdir(parents=True, exist_ok=True)
+    with open(OUT / "ae_accuracy.csv", "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0]) )
+        w.writeheader()
+        w.writerows(rows)
+    with open(OUT / "ae_accuracy_fit.csv", "w") as f:
+        f.write(f"a,b\n{float(fit.a)},{float(fit.b)}\n")
+    # Assumption 1 check: increasing in rho
+    accs = [r["proxy_accuracy"] for r in rows]
+    print("accuracy non-decreasing in rho:",
+          all(accs[i + 1] >= accs[i] - 0.05 for i in range(len(accs) - 1)))
+
+
+if __name__ == "__main__":
+    main()

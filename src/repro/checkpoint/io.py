@@ -1,0 +1,50 @@
+"""Pytree checkpointing to .npz (no orbax in this container).
+
+Leaves are flattened with '/'-joined key paths; restore rebuilds into the
+structure of a reference pytree (so dataclass/NamedTuple states round-trip).
+Sharded arrays are gathered on save and re-sharded by the caller on restore
+(`jax.device_put(tree, shardings)`).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name in ("bfloat16", "float16"):
+            arr = arr.astype(np.float32)   # npz-safe; re-cast on restore
+        out[key] = arr
+    return out
+
+
+def save(path: str, tree) -> None:
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+
+
+def restore(path: str, like):
+    """Restore into the structure of `like` (shapes/dtypes validated)."""
+    with np.load(path, allow_pickle=False) as data:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for p, ref in flat:
+            key = "/".join(str(x) for x in p)
+            if key not in data:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            arr = data[key]
+            if arr.shape != np.shape(ref):
+                raise ValueError(f"{key}: shape {arr.shape} != {np.shape(ref)}")
+            import jax.numpy as jnp
+
+            leaves.append(jnp.asarray(arr).astype(jnp.asarray(ref).dtype))
+        return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,32 @@
+"""Architecture registry: `--arch <id>` resolves here."""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+ARCHS = (
+    "arctic_480b",
+    "deepseek_v3_671b",
+    "rwkv6_1_6b",
+    "jamba_1_5_large_398b",
+    "starcoder2_3b",
+    "gemma2_9b",
+    "qwen2_5_3b",
+    "hubert_xlarge",
+    "gemma2_2b",
+    "pixtral_12b",
+    "fedsem_autoencoder",   # the paper's own model (not an LM config)
+)
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+
+
+def get_config(name: str) -> ModelConfig:
+    name = _ALIASES.get(name, name).replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.CONFIG
+
+
+def list_archs():
+    return [a for a in ARCHS if a != "fedsem_autoencoder"]

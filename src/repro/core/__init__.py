@@ -1,0 +1,11 @@
+"""FedSem core: the paper's resource-allocation contribution in JAX."""
+from .accuracy import AccuracyFn, default_accuracy, fit_power_law
+from .allocator import AllocatorConfig, AllocatorResult, solve
+from .channel import sample_params
+from .types import Allocation, SystemParams, Weights, dbm_to_watt
+
+__all__ = [
+    "AccuracyFn", "default_accuracy", "fit_power_law",
+    "AllocatorConfig", "AllocatorResult", "solve",
+    "sample_params", "Allocation", "SystemParams", "Weights", "dbm_to_watt",
+]

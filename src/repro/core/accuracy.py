@@ -1,0 +1,63 @@
+"""Accuracy-vs-compression-rate models A(rho) (paper Assumption 1, Fig. 8b).
+
+The paper fits mAP-vs-rho of YOLOv5 on COCO to ``A(rho) = 0.6356 * rho**0.4025``
+and only uses (i) monotonic increase, (ii) concavity, (iii) A'(rho) of the fit.
+We ship that exact fit as the default, plus a generic power-law / log family and
+a least-squares fitter so the FL-trained autoencoder example can regenerate the
+curve from its own measurements (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["a", "b"],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class AccuracyFn:
+    """A(rho) = a * rho**b with a > 0, 0 < b < 1 (increasing + concave)."""
+
+    a: jax.Array
+    b: jax.Array
+
+    def value(self, rho):
+        rho = jnp.maximum(jnp.asarray(rho, jnp.float32), 1e-9)
+        return self.a * jnp.power(rho, self.b)
+
+    def deriv(self, rho):
+        rho = jnp.maximum(jnp.asarray(rho, jnp.float32), 1e-9)
+        return self.a * self.b * jnp.power(rho, self.b - 1.0)
+
+
+def default_accuracy() -> AccuracyFn:
+    """The paper's YOLOv5/COCO fit: A(rho) = 0.6356 rho^0.4025."""
+    return AccuracyFn(jnp.float32(0.6356), jnp.float32(0.4025))
+
+
+def yolov3_accuracy() -> AccuracyFn:
+    """Slightly lower-ceiling curve used for the paper's YOLOv3 line (Fig 8b).
+
+    The paper does not print the YOLOv3 coefficients; we use a curve with the
+    same concavity class for the benchmark's second line.
+    """
+    return AccuracyFn(jnp.float32(0.55), jnp.float32(0.45))
+
+
+def fit_power_law(rhos: jnp.ndarray, accs: jnp.ndarray) -> AccuracyFn:
+    """Least-squares fit of log A = log a + b log rho (as the paper's MATLAB fit)."""
+    rhos = jnp.asarray(rhos, jnp.float32)
+    accs = jnp.asarray(accs, jnp.float32)
+    x = jnp.log(jnp.maximum(rhos, 1e-9))
+    y = jnp.log(jnp.maximum(accs, 1e-9))
+    xm, ym = jnp.mean(x), jnp.mean(y)
+    b = jnp.sum((x - xm) * (y - ym)) / jnp.maximum(jnp.sum(jnp.square(x - xm)), 1e-12)
+    log_a = ym - b * xm
+    b = jnp.clip(b, 0.05, 0.95)  # keep Assumption 1 (increasing, concave)
+    return AccuracyFn(jnp.exp(log_a), b)

@@ -1,0 +1,196 @@
+"""Alg. A2 — the FedSem resource-allocation algorithm (paper §IV-D).
+
+Alternates:
+  Step 1: given (P, X), solve P3(f, rho, T) in closed form (Theorem 1);
+  Step 2: given (f, rho, T), solve P4 -> P5 for (P, X) — either the
+          paper-faithful SCA/KKT path (`inner="sca"`, Alg. A1) or the
+          PGD reference solver (`inner="pgd"`, DESIGN.md §8 cross-check);
+until |s^(i) - s^(i-1)| <= eps or J_max (we run a fixed J_max scan and return
+the trace; convergence is asserted from the trace in tests).
+
+Afterwards X is hardened to binary (every subcarrier to its argmax device,
+every device guaranteed >= 1 subcarrier), powers are re-solved given the
+binary X, and (f, rho) are re-derived — a beyond-paper robustness step that
+guarantees the reported allocation is feasible for the *original* P1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .accuracy import AccuracyFn, default_accuracy
+from .p3 import solve_p3
+from .p5 import P5Config, r_min, solve_p5
+from .pgd import PGDConfig, power_given_x, solve_p4_pgd
+from .system import objective
+from .types import Allocation, SystemParams, Weights
+
+
+class AllocatorConfig(NamedTuple):
+    outer_iters: int = 6           # J_max of Alg. A2
+    inner: str = "sca"             # "sca" (Alg. A1) | "pgd" (reference) |
+                                   # "auto" (run both, keep the better)
+    p5: P5Config = P5Config()
+    pgd: PGDConfig = PGDConfig()
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["alloc", "trace"],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class AllocatorResult:
+    alloc: Allocation
+    trace: jax.Array  # objective s^(i) per outer iteration
+
+
+def equal_start(params: SystemParams):
+    """Round-robin X, per-subcarrier power Pmax/|K_n|, f = fmax/2 (warm start)."""
+    k_idx = jnp.arange(params.K)
+    owner = k_idx % params.N
+    X = jnp.zeros((params.N, params.K)).at[owner, k_idx].set(1.0)
+    n_sc = jnp.sum(X, axis=-1, keepdims=True)
+    P = X * params.p_max[:, None] / jnp.maximum(n_sc, 1.0)
+    f = params.f_max * 0.5
+    return f, P, X
+
+
+def low_power_start(params: SystemParams, margin: float = 1.5):
+    """Round-robin X, powers sized to just clear the SemCom rate floor.
+
+    The alternating P3/P4 decomposition has init-dependent fixed points: from
+    an equal-power start, Theorem 1 picks f so every uncapped device is
+    exactly tight on T, which pins r_min at the *current* rate and blocks any
+    power reduction. Starting near the SemCom floor r = C/Tsc_max (the true
+    binding rate for the paper's defaults, where E_sc dominates) lets the
+    alternation settle at the low-energy fixed point. Multi-start over both
+    (paper leaves "the initial feasible solution" unspecified).
+    """
+    f, _, X = equal_start(params)
+    n_sc = jnp.maximum(jnp.sum(X, axis=-1), 1.0)
+    target = margin * params.C / params.t_sc_max             # rho=1 worst case
+    per_sc = target / n_sc                                   # rate per subcarrier
+    snr = jnp.exp2(per_sc / params.bbar) - 1.0
+    P = X * (snr[:, None] * params.noise_sc / jnp.maximum(params.g, 1e-18))
+    # stay feasible: respect the per-device power budget
+    scale = jnp.minimum(1.0, params.p_max / jnp.maximum(jnp.sum(P, -1), 1e-12))
+    P = P * scale[:, None]
+    return f, P, X
+
+
+def repair_rate_floor(params: SystemParams, P, X, rmin, iters: int = 30):
+    """Per-device multiplicative power rescale so r_n >= rmin_n (bisection).
+
+    The inner solvers treat the rate floor with multipliers/penalties and can
+    exit slightly infeasible; left unrepaired the violation compounds across
+    Alg. A2 iterations (rho_max = Tsc_max r / C collapses). Rates increase
+    monotonically in a per-device power scale, so a bisection on the scale
+    restores feasibility; devices that cannot reach rmin even at Pmax are
+    clamped to their budget.
+    """
+    from .system import device_rate
+
+    p_tot = jnp.maximum(jnp.sum(P, -1), 1e-12)
+    s_cap = params.p_max / p_tot                       # max admissible scale
+
+    def rate_at(s):
+        return device_rate(params, P * s[:, None], X)
+
+    need = rate_at(jnp.ones_like(p_tot)) < rmin
+    lo = jnp.ones_like(p_tot)
+    hi = jnp.maximum(s_cap, 1.0)
+
+    def body(_, state):
+        lo, hi = state
+        mid = 0.5 * (lo + hi)
+        ok = rate_at(mid) >= rmin
+        return jnp.where(ok, lo, mid), jnp.where(ok, mid, hi)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    s = jnp.where(need, jnp.minimum(hi, s_cap), 1.0)
+    return P * s[:, None]
+
+
+def harden_x(X: jnp.ndarray, N: int, K: int) -> jnp.ndarray:
+    """Binary X: argmax per subcarrier, then guarantee >=1 subcarrier/device."""
+    assign = jnp.argmax(X, axis=0)  # (K,)
+
+    def fix_device(n, assign):
+        counts = jnp.zeros((N,), jnp.int32).at[assign].add(1)
+        has = counts[n] > 0
+        donor_ok = counts[assign] > 1                   # only steal from the rich
+        score = jnp.where(donor_ok, X[n], -jnp.inf)
+        k_star = jnp.argmax(score)
+        return jnp.where(has, assign, assign.at[k_star].set(n))
+
+    assign = jax.lax.fori_loop(0, N, fix_device, assign)
+    return jnp.zeros((N, K)).at[assign, jnp.arange(K)].set(1.0)
+
+
+def solve(
+    params: SystemParams,
+    weights: Weights,
+    cfg: AllocatorConfig = AllocatorConfig(),
+    accuracy: AccuracyFn | None = None,
+) -> AllocatorResult:
+    """Alg. A2 with multi-start (equal + low-power inits), best kept.
+
+    inner="auto" additionally races the paper-faithful SCA path against the
+    PGD cross-check solver and keeps the better allocation.
+    """
+    acc = accuracy or default_accuracy()
+    inners = ("sca", "pgd") if cfg.inner == "auto" else (cfg.inner,)
+    results = [
+        _solve_from(params, weights, cfg._replace(inner=inner), acc, start)
+        for inner in inners
+        for start in (equal_start(params), low_power_start(params))
+    ]
+    objs = jnp.stack([objective(params, weights, r.alloc, acc) for r in results])
+    best = jnp.argmin(objs)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *results)
+    return jax.tree.map(lambda x: x[best], stacked)
+
+
+def _solve_from(
+    params: SystemParams,
+    weights: Weights,
+    cfg: AllocatorConfig,
+    acc: AccuracyFn,
+    start,
+) -> AllocatorResult:
+    """One Alg. A2 run from a given (f, P, X) start."""
+    f, P, X = start
+
+    def outer(carry, _):
+        f, P, X = carry
+        p3 = solve_p3(params, weights, P, X, acc)           # Step 1 (Theorem 1)
+        payload = params.D + p3.rho * params.C
+        rmin = r_min(params, p3.rho, p3.T, p3.f)
+        if cfg.inner == "sca":                               # Step 2 (Alg. A1)
+            sol = solve_p5(params, weights, p3.rho, p3.T, p3.f, P, X, cfg.p5)
+            P_new, X_new = sol.P, sol.X
+        else:
+            P_new, X_new = solve_p4_pgd(
+                params, weights.kappa1, payload, rmin, P, X, cfg.pgd
+            )
+        P_new = repair_rate_floor(params, P_new, X_new, rmin)
+        s = objective(params, weights, Allocation(p3.f, P_new, X_new, p3.rho), acc)
+        return (p3.f, P_new, X_new), s
+
+    (f, P, X), trace = jax.lax.scan(outer, (f, P, X), None, length=cfg.outer_iters)
+
+    # ---- hardening: binary X, re-solved powers, re-derived (f, rho) ----
+    Xb = harden_x(X, params.N, params.K)
+    p3 = solve_p3(params, weights, P * Xb, Xb, acc)
+    payload = params.D + p3.rho * params.C
+    rmin = r_min(params, p3.rho, p3.T, p3.f)
+    P = power_given_x(params, weights.kappa1, payload, rmin, Xb, P0=P * Xb)
+    P = repair_rate_floor(params, P, Xb, rmin)
+    p3 = solve_p3(params, weights, P, Xb, acc)               # final (f, rho, T)
+    alloc = Allocation(f=p3.f, P=P, X=Xb, rho=p3.rho)
+    return AllocatorResult(alloc=alloc, trace=trace)

@@ -1,0 +1,80 @@
+"""The paper's four baselines (Section V-B).
+
+* Equal Allocation          — round-robin subcarriers, equal power, f = 1 GHz,
+                              rho = 1.
+* Communication Opt. Only   — optimise (P, X) only; f random in [0.5, 1.5] GHz,
+                              rho = 1.
+* Computation Opt. Only     — optimise f only (Theorem-1 machinery); P at Pmax
+                              spread over an equal X; rho = 1.
+* Random Allocation         — uniformly random feasible (X, P, f); rho = 1.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .p3 import solve_T
+from .pgd import PGDConfig, solve_p4_pgd
+from .types import Allocation, SystemParams, Weights
+
+
+def _equal_x(params: SystemParams) -> jnp.ndarray:
+    k_idx = jnp.arange(params.K)
+    owner = k_idx % params.N
+    return jnp.zeros((params.N, params.K)).at[owner, k_idx].set(1.0)
+
+
+def _spread_power(params: SystemParams, X: jnp.ndarray, frac: float = 1.0) -> jnp.ndarray:
+    n_sc = jnp.sum(X, axis=-1, keepdims=True)
+    return X * frac * params.p_max[:, None] / jnp.maximum(n_sc, 1.0)
+
+
+def equal_allocation(params: SystemParams) -> Allocation:
+    X = _equal_x(params)
+    return Allocation(
+        f=jnp.full((params.N,), 1e9),
+        P=_spread_power(params, X),
+        X=X,
+        rho=jnp.float32(1.0),
+    )
+
+
+def comm_opt_only(
+    params: SystemParams, weights: Weights, key: jax.Array,
+    cfg: PGDConfig = PGDConfig(),
+) -> Allocation:
+    f = jax.random.uniform(key, (params.N,), minval=0.5e9, maxval=1.5e9)
+    rho = jnp.float32(1.0)
+    payload = params.D + rho * params.C
+    rmin = rho * params.C / params.t_sc_max          # only the SemCom deadline
+    X0 = _equal_x(params)
+    P0 = _spread_power(params, X0)
+    P, X = solve_p4_pgd(params, weights.kappa1, payload, rmin, P0, X0, cfg)
+    return Allocation(f=f, P=P, X=X, rho=rho)
+
+
+def comp_opt_only(params: SystemParams, weights: Weights) -> Allocation:
+    X = _equal_x(params)
+    P = _spread_power(params, X)                      # P at Pmax (spread)
+    from .system import device_rate, fl_tx_time
+
+    tau = fl_tx_time(params, device_rate(params, P, X))
+    T = solve_T(params, weights, tau)
+    eta_cd = params.eta * params.c * params.d
+    f = jnp.minimum(eta_cd / jnp.maximum(T - tau, 1e-9), params.f_max)
+    return Allocation(f=f, P=P, X=X, rho=jnp.float32(1.0))
+
+
+def random_allocation(params: SystemParams, key: jax.Array) -> Allocation:
+    k_own, k_p, k_f = jax.random.split(key, 3)
+    owner = jax.random.randint(k_own, (params.K,), 0, params.N)
+    X = jnp.zeros((params.N, params.K)).at[owner, jnp.arange(params.K)].set(1.0)
+    # random power, rescaled into the feasible region (13a)+(13b)
+    raw = jax.random.uniform(k_p, (params.N, params.K)) * X
+    scale = jnp.minimum(
+        1.0, params.p_max / jnp.maximum(jnp.sum(raw, -1), 1e-12)
+    )
+    P = raw * scale[:, None]
+    f = jax.random.uniform(k_f, (params.N,), minval=0.1e9) * (params.f_max / 2e9) * 2.0
+    f = jnp.minimum(f, params.f_max)
+    return Allocation(f=f, P=P, X=X, rho=jnp.float32(1.0))

@@ -1,0 +1,118 @@
+"""Approximate exhaustive search (paper §V-F, Table II).
+
+The paper's toy: N=4 devices, K=5 subcarriers, coarse grids over f, p, rho.
+We enumerate all N^K subcarrier assignments exactly, and per assignment sweep
+a per-device (f, p, rho) grid. Per-device power is spread equally over the
+device's subcarriers (the paper's per-(n,k) grid at 1.5e10 points is not
+tractable on one CPU core; reductions documented in benchmarks/table2).
+
+The grid objective evaluation is the compute hot-spot; it runs through
+``repro.kernels.fedsem_objective`` (Pallas kernel with jnp fallback).
+"""
+from __future__ import annotations
+
+import itertools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .system import subcarrier_rate
+from .types import Allocation, SystemParams, Weights, dbm_to_watt
+
+
+class ExhaustiveResult(NamedTuple):
+    alloc: Allocation
+    value: jnp.ndarray
+    n_evaluated: int
+
+
+def _grid_eval_fn():
+    from repro.kernels.fedsem_objective import ops
+
+    return ops.objective_grid
+
+
+def solve_exhaustive(
+    params: SystemParams,
+    weights: Weights,
+    f_levels: np.ndarray,
+    p_levels_dbm: np.ndarray,
+    rho_levels: np.ndarray,
+    accuracy_ab=(0.6356, 0.4025),
+) -> ExhaustiveResult:
+    N, K = params.N, params.K
+    assert N**K <= 2_000_000, "exhaustive X enumeration too large"
+    objective_grid = _grid_eval_fn()
+
+    f_levels = np.asarray(f_levels, np.float32)
+    p_levels = np.asarray(dbm_to_watt(jnp.asarray(p_levels_dbm)), np.float32)
+    rho_levels = np.asarray(rho_levels, np.float32)
+
+    # per-device candidate tuples (f, p) — meshgrid over devices
+    f_mesh = np.stack(
+        np.meshgrid(*([f_levels] * N), indexing="ij"), -1
+    ).reshape(-1, N)                                      # (Lf^N, N)
+    p_mesh = np.stack(
+        np.meshgrid(*([p_levels] * N), indexing="ij"), -1
+    ).reshape(-1, N)                                      # (Lp^N, N)
+
+    @jax.jit
+    def eval_assignment(owner):
+        """owner: (K,) int device per subcarrier -> (best value, argmin info)."""
+        X = jnp.zeros((N, K)).at[owner, jnp.arange(K)].set(1.0)
+        n_sc = jnp.maximum(jnp.sum(X, axis=-1), 1.0)      # (N,)
+        p_levels_j = jnp.asarray(p_levels)
+        # rate table: (Lp, N) — device rate when transmitting at level p total
+        P_tab = (p_levels_j[:, None, None] / n_sc[None, :, None]) * X[None]
+        r_tab = jnp.sum(X[None] * subcarrier_rate(params, P_tab), axis=-1)  # (Lp, N)
+
+        # broadcast candidates: G = Lf^N * Lp^N * Lr
+        fs = jnp.asarray(f_mesh)                           # (A, N)
+        p_idx = jnp.stack(
+            jnp.meshgrid(*([jnp.arange(len(p_levels))] * N), indexing="ij"), -1
+        ).reshape(-1, N)                                   # (B, N)
+        ps = p_levels_j[p_idx]                             # (B, N)
+        rs = r_tab[p_idx, jnp.arange(N)[None, :]]          # (B, N)
+
+        A_, B_ = fs.shape[0], ps.shape[0]
+        Lr = len(rho_levels)
+        f_c = jnp.repeat(fs, B_ * Lr, axis=0)
+        p_c = jnp.tile(jnp.repeat(ps, Lr, axis=0), (A_, 1))
+        r_c = jnp.tile(jnp.repeat(rs, Lr, axis=0), (A_, 1))
+        rho_c = jnp.tile(jnp.asarray(rho_levels), A_ * B_)
+
+        obj = objective_grid(
+            f_c, p_c, r_c, rho_c,
+            params.c, params.d, params.D, params.C,
+            params.t_sc_max, params.f_max,
+            float(params.xi), float(params.eta),
+            float(weights.kappa1), float(weights.kappa2), float(weights.kappa3),
+            accuracy_ab,
+        )
+        best = jnp.argmin(obj)
+        return obj[best], f_c[best], p_c[best], rho_c[best]
+
+    best_val = np.inf
+    best = None
+    n_eval = 0
+    per_x = len(f_mesh) * len(p_mesh) * len(rho_levels)
+    for owner_tuple in itertools.product(range(N), repeat=K):
+        owner = jnp.asarray(owner_tuple, jnp.int32)
+        val, f_c, p_c, rho_c = eval_assignment(owner)
+        n_eval += per_x
+        val = float(val)
+        if val < best_val:
+            best_val = val
+            best = (np.asarray(owner_tuple), np.asarray(f_c), np.asarray(p_c), float(rho_c))
+
+    owner, f_c, p_c, rho_c = best
+    X = np.zeros((N, K), np.float32)
+    X[owner, np.arange(K)] = 1.0
+    n_sc = np.maximum(X.sum(-1), 1.0)
+    P = X * (p_c / n_sc)[:, None]
+    alloc = Allocation(
+        f=jnp.asarray(f_c), P=jnp.asarray(P), X=jnp.asarray(X), rho=jnp.float32(rho_c)
+    )
+    return ExhaustiveResult(alloc=alloc, value=jnp.float32(best_val), n_evaluated=n_eval)

@@ -1,0 +1,123 @@
+"""Closed-form solver for subproblem P3(f, rho, T) — paper Theorem 1.
+
+Given fixed (P, X):
+  * rho* solves Delta(rho) = sum_n kappa1 p_n C_n / r_n - kappa3 sum_n A'(rho) = 0
+    (eq. 20/24), clipped at rho_max = min(1, min_n Tsc_max r_n / C_n);
+  * T# solves F(T) = sum_n 2 kappa1 xi (min(eta c d/(T - tau), fmax))^3 - kappa2 = 0
+    (eq. 28) by bisection;
+  * f*_n = min(eta c_n d_n / (T# - tau_n), fmax)   (eq. 29)
+  * T*   = max_n tau_n + eta c_n d_n / f*_n        (eq. 30)
+
+Bisections are fixed-iteration ``lax.fori_loop`` so the solver jits and vmaps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .accuracy import AccuracyFn, default_accuracy
+from .system import comp_time, device_power, device_rate, fl_tx_time
+from .types import SystemParams, Weights
+
+_RHO_LO = 1e-4
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["f", "rho", "T"],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class P3Solution:
+    f: jax.Array
+    rho: jax.Array
+    T: jax.Array
+
+
+def _bisect(fn, lo, hi, iters: int = 60):
+    """Root of a scalar monotone function on [lo, hi] (sign change assumed)."""
+    f_lo = fn(lo)
+
+    def body(_, state):
+        lo, hi = state
+        mid = 0.5 * (lo + hi)
+        same_side = jnp.sign(fn(mid)) == jnp.sign(f_lo)
+        lo = jnp.where(same_side, mid, lo)
+        hi = jnp.where(same_side, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return 0.5 * (lo + hi)
+
+
+def solve_rho(
+    params: SystemParams,
+    weights: Weights,
+    r: jnp.ndarray,
+    p_n: jnp.ndarray,
+    accuracy: AccuracyFn,
+) -> jnp.ndarray:
+    """Optimal compression rate, eq. (24)."""
+    # marginal SemCom energy cost of rho (constant in rho)
+    cost = jnp.sum(weights.kappa1 * p_n * params.C / jnp.maximum(r, 1e-12))
+
+    def delta(rho):
+        return cost - weights.kappa3 * jnp.sum(
+            jnp.broadcast_to(accuracy.deriv(rho), (params.N,))
+        )
+
+    # Delta is increasing in rho (A' decreasing). Root in [_RHO_LO, 1] if sign
+    # change; else the optimum sits at the boundary with the right sign.
+    rho_hash = jnp.where(
+        delta(_RHO_LO) >= 0.0,
+        _RHO_LO,
+        jnp.where(delta(1.0) <= 0.0, 1.0, _bisect(delta, jnp.float32(_RHO_LO), jnp.float32(1.0))),
+    )
+    rho_max = jnp.minimum(
+        1.0, jnp.min(params.t_sc_max * jnp.maximum(r, 1e-12) / params.C)
+    )
+    return jnp.clip(jnp.minimum(rho_hash, rho_max), _RHO_LO, 1.0)
+
+
+def solve_T(params: SystemParams, weights: Weights, tau: jnp.ndarray) -> jnp.ndarray:
+    """Bisection on F(T) = sum 2 k1 xi f_n(T)^3 - k2 = 0 (eq. 28)."""
+    eta_cd = params.eta * params.c * params.d
+
+    def F(T):
+        f = jnp.minimum(eta_cd / jnp.maximum(T - tau, 1e-9), params.f_max)
+        return jnp.sum(2.0 * weights.kappa1 * params.xi * f**3) - weights.kappa2
+
+    t_lo = jnp.max(tau + eta_cd / params.f_max)
+
+    # grow hi until F < 0 (F -> -kappa2 < 0 as T -> inf)
+    def grow(_, hi):
+        return jnp.where(F(hi) > 0.0, hi * 2.0, hi)
+
+    t_hi = jax.lax.fori_loop(0, 40, grow, t_lo * 2.0 + 1.0)
+    t_star = _bisect(F, t_lo, t_hi)
+    # if even the smallest feasible T has F <= 0, energy always wins: T = t_lo
+    return jnp.where(F(t_lo) <= 0.0, t_lo, t_star)
+
+
+def solve_p3(
+    params: SystemParams,
+    weights: Weights,
+    P: jnp.ndarray,
+    X: jnp.ndarray,
+    accuracy: AccuracyFn | None = None,
+) -> P3Solution:
+    """Theorem 1: optimal (f, rho, T) given fixed (P, X)."""
+    acc = accuracy or default_accuracy()
+    r = device_rate(params, P, X)
+    p_n = device_power(P)
+    tau = fl_tx_time(params, r)
+
+    rho = solve_rho(params, weights, r, p_n, acc)
+    T_hash = solve_T(params, weights, tau)
+    eta_cd = params.eta * params.c * params.d
+    f = jnp.minimum(eta_cd / jnp.maximum(T_hash - tau, 1e-9), params.f_max)
+    T = jnp.max(tau + comp_time(params, f))
+    return P3Solution(f=f, rho=rho, T=T)

@@ -1,0 +1,206 @@
+"""Subproblem P5(P, X, sigma): SCA + quadratic transform + KKT primal-dual.
+
+Paper-faithful path (Alg. A1 / Theorem 2). Per outer iteration we
+
+  1. update the quadratic-transform auxiliary  y_n = 1 / (2 (sum_k p) sigma_n)
+     (eq. 37, [43]) and the SCA linearisation point x_bar = X^(i-1);
+  2. seek a KKT point of the inner (fixed-y, fixed-x_bar) problem by running
+     projected primal-dual gradient flow on the paper's exact partial
+     Lagrangian L2 (eq. 39): primal descent on (P, X, sigma) with box
+     projections, dual ascent on (beta_k, iota_nk, lambda_n, nu_n >= 0).
+     The paper's Steps 1-4 solve the same KKT system by nested scalar
+     bisections on the *interior* stationarity expressions (49)/(50)/(52);
+     those expressions are ill-posed at box-boundary solutions (which the
+     binary penalty actively drives X to), so we use the gradient flow — the
+     fixed points coincide with Theorem 2's KKT points (asserted in tests via
+     KKT residual checks). See DESIGN.md §4/§8.
+  3. track h^(i) = kappa1 sum sigma - varsigma J(X) and stop on I_max
+     (Alg. A1 lines 10-11; the trace is returned for convergence analysis).
+
+Numerics: everything is nondimensionalised — rates in units of Bbar (so
+r' = sum_k x log2(1+SNR)), payload' = (D + rho C)/Bbar [s] — which puts all
+multipliers within ~2 orders of magnitude of each other instead of 8.
+
+Note: eqs. (50)/(52) in the paper drop the `rho C_n` payload term that their
+own objective (31) carries; we keep `D_n + rho C_n` consistently.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .system import device_rate
+from .types import SystemParams, Weights
+
+_EPS = 1e-12
+
+
+class P5Config(NamedTuple):
+    outer_iters: int = 8           # I_max of Alg. A1
+    inner_iters: int = 250         # primal-dual steps per outer iteration
+    lr_primal: float = 0.05       # Adam on (P, X, sigma) (normalised vars)
+    lr_dual: float = 0.15          # projected ascent on multipliers
+    varsigma: float = 0.5          # binary penalty factor (vs kappa1*sigma ~ J)
+    nu_min: float = 1e-5           # paper: nu_n > 0 strictly
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["P", "X", "sigma", "h"],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class P5Solution:
+    P: jax.Array
+    X: jax.Array
+    sigma: jax.Array
+    h: jax.Array  # objective trace (outer_iters,)
+
+
+def r_min(params: SystemParams, rho, T, f) -> jnp.ndarray:
+    """Combined rate floor: r_n >= max(rho C / Tsc_max, D / (T - t_c))  (§IV-B)."""
+    t_c = params.eta * params.c * params.d / jnp.maximum(f, _EPS)
+    slack = jnp.maximum(T - t_c, 1e-6)
+    return jnp.maximum(rho * params.C / params.t_sc_max, params.D / slack)
+
+
+def _linear_cap(params: SystemParams, x, x_bar):
+    """Linearised power cap of (35a): [x_bar^q + q x_bar^(q-1) (x - x_bar)] Pmax."""
+    q = float(params.q)
+    xb = jnp.clip(x_bar, 1e-3, 1.0)
+    cap = (xb**q + q * xb ** (q - 1.0) * (x - xb)) * params.p_max[:, None]
+    return jnp.clip(cap, 0.0, params.p_max[:, None])
+
+
+def penalty_J(x, x_bar):
+    """J(X) of eq. (34) (linear in x; -varsigma*J pushes x to {0,1})."""
+    return jnp.sum((2.0 * x_bar - 1.0) * (x - x_bar) + x_bar * (x_bar - 1.0))
+
+
+def _adam(g, m, v, t, lr):
+    m = 0.9 * m + 0.1 * g
+    v = 0.999 * v + 0.001 * jnp.square(g)
+    mh = m / (1 - 0.9**t)
+    vh = v / (1 - 0.999**t)
+    return -lr * mh / (jnp.sqrt(vh) + 1e-8), m, v
+
+
+def _inner_primal_dual(params, weights, payload_nd, rmin_nd, y, x_bar, init, cfg):
+    """Projected primal-dual gradient flow on L2 (eq. 39), nondimensional."""
+    P0, X0, sigma0 = init
+    g_nd = params.g / params.noise_sc          # SNR per watt, (N, K)
+    pmax = params.p_max[:, None]
+    _LN2 = 0.6931471805599453
+
+    def rate_nd(P, X):
+        return jnp.sum(X * jnp.log1p(P * g_nd), axis=-1) / _LN2   # r / Bbar
+
+    def lagrangian(P, X, sigma, duals):
+        beta, iota, lam, nu = duals
+        r = rate_nd(P, X)
+        p_sum = jnp.sum(P, axis=-1)
+        quad = jnp.square(p_sum) * y + 1.0 / (4.0 * y * jnp.square(jnp.maximum(sigma, _EPS)))
+        return (
+            weights.kappa1 * jnp.sum(sigma)
+            - cfg.varsigma * penalty_J(X, x_bar)
+            + jnp.sum(beta * (jnp.sum(X, axis=0) - 1.0))
+            + jnp.sum(lam * (rmin_nd - r))
+            + jnp.sum(iota * (P - _linear_cap(params, X, x_bar)) / pmax)
+            + jnp.sum(nu * (quad * payload_nd - r))
+        )
+
+    grad_primal = jax.grad(lagrangian, argnums=(0, 1, 2))
+
+    def residuals(P, X, sigma):
+        r = rate_nd(P, X)
+        p_sum = jnp.sum(P, axis=-1)
+        quad = jnp.square(p_sum) * y + 1.0 / (4.0 * y * jnp.square(jnp.maximum(sigma, _EPS)))
+        res_beta = jnp.sum(X, axis=0) - 1.0
+        res_iota = (P - _linear_cap(params, X, x_bar)) / pmax
+        res_lam = (rmin_nd - r) / jnp.maximum(rmin_nd, 1.0)
+        res_nu = (quad * payload_nd - r) / jnp.maximum(rmin_nd, 1.0)
+        return res_beta, res_iota, res_lam, res_nu
+
+    def step(state, i):
+        P, X, sigma, duals, moms = state
+        t = i + 1.0
+        gP, gX, gS = grad_primal(P, X, sigma, duals)
+        gP, gX, gS = (jnp.nan_to_num(g, posinf=1e6, neginf=-1e6) for g in (gP, gX, gS))
+        # normalise primal gradients to their variable scales
+        (mP, vP), (mX, vX), (mS, vS) = moms
+        dP, mP, vP = _adam(gP, mP, vP, t, cfg.lr_primal * jnp.mean(params.p_max))
+        dX, mX, vX = _adam(gX, mX, vX, t, cfg.lr_primal)
+        dS, mS, vS = _adam(gS, mS, vS, t, cfg.lr_primal * jnp.maximum(jnp.mean(sigma), 0.01))
+        P = jnp.clip(P + dP, 0.0, pmax)
+        X = jnp.clip(X + dX, 0.0, 1.0)
+        sigma = jnp.maximum(sigma + dS, 1e-4)
+
+        beta, iota, lam, nu = duals
+        rb, ri, rl, rn = residuals(P, X, sigma)
+        lr_d = cfg.lr_dual / jnp.sqrt(t)
+        beta = jnp.maximum(beta + lr_d * rb, 0.0)
+        iota = jnp.maximum(iota + lr_d * ri, 0.0)
+        lam = jnp.maximum(lam + lr_d * rl, 0.0)
+        nu = jnp.maximum(nu + lr_d * rn, cfg.nu_min)
+        moms = ((mP, vP), (mX, vX), (mS, vS))
+        return (P, X, sigma, (beta, iota, lam, nu), moms), None
+
+    duals0 = (
+        jnp.zeros((params.K,)),
+        jnp.zeros((params.N, params.K)),
+        jnp.full((params.N,), 0.1),
+        # nu scaled from interior stationarity (42): nu = 2 y k1 sigma^3/payload
+        jnp.maximum(2.0 * y * weights.kappa1 * sigma0**3 / payload_nd, cfg.nu_min),
+    )
+    zeros = lambda x: (jnp.zeros_like(x), jnp.zeros_like(x))
+    moms0 = (zeros(P0), zeros(X0), zeros(sigma0))
+    state = (P0, X0, sigma0, duals0, moms0)
+    state, _ = jax.lax.scan(
+        step, state, jnp.arange(cfg.inner_iters, dtype=jnp.float32)
+    )
+    return state[0], state[1], state[2]
+
+
+def solve_p5(
+    params: SystemParams,
+    weights: Weights,
+    rho,
+    T,
+    f,
+    P0: jnp.ndarray,
+    X0: jnp.ndarray,
+    cfg: P5Config = P5Config(),
+) -> P5Solution:
+    """Alg. A1: SCA outer loop with quadratic-transform y-updates."""
+    payload_nd = (params.D + rho * params.C) / params.bbar      # [s]
+    rmin_nd = r_min(params, rho, T, f) / params.bbar
+
+    def ratio_sigma(P, X):
+        r_nd = device_rate(params, P, X) / params.bbar
+        return jnp.clip(
+            jnp.sum(P, -1) * payload_nd / jnp.maximum(r_nd, 1e-3), 1e-5, 1e6
+        )
+
+    sigma0 = ratio_sigma(P0, X0)                            # Alg. A1 line 3
+
+    def outer(carry, _):
+        P, X, sigma = carry
+        p_sum = jnp.maximum(jnp.sum(P, -1), 1e-7)
+        y = 1.0 / (2.0 * p_sum * sigma)                     # line 6 / eq. (37)
+        y = jnp.clip(y, 1e-4, 1e8)
+        x_bar = X                                           # SCA point
+        P, X, _sig = _inner_primal_dual(
+            params, weights, payload_nd, rmin_nd, y, x_bar, (P, X, sigma), cfg
+        )
+        sigma = ratio_sigma(P, X)                           # tight epigraph
+        h = weights.kappa1 * jnp.sum(sigma) - cfg.varsigma * penalty_J(X, x_bar)
+        return (P, X, sigma), h
+
+    (P, X, sigma), hs = jax.lax.scan(
+        outer, (P0, X0, sigma0), None, length=cfg.outer_iters
+    )
+    return P5Solution(P=P, X=X, sigma=sigma, h=hs)

@@ -1,0 +1,161 @@
+"""Projected-gradient (Adam) reference solver for subproblem P4(P, X).
+
+Cross-check for the paper-faithful KKT/SCA path in `p5.py` (DESIGN.md §8):
+two independent solvers agreeing on toy instances is the validation story.
+
+Parametrisation enforces the hard constraints *exactly* and without gradient
+dead-zones:
+  * per subcarrier k, (x_{1..N,k}, x_unassigned) = softmax over N+1 logits
+    => constraint (13d)  sum_n x_{n,k} <= 1  holds by construction;
+  * per device, a learnable power budget  B_n = Pmax_n * sigmoid(w_tot_n)
+    and a per-subcarrier shape  P_raw = Pmax * x^q * sigmoid(w); the final
+    P = P_raw * min(1, B_n / sum_k P_raw)  keeps (13a)+(13b) while the budget
+    itself stays differentiable (a plain min(1, Pmax/sum) clamp has zero
+    gradient to total power once it binds — that dead zone previously froze
+    every solve at ~full power);
+remaining soft constraints (rate floor r_n >= rmin_n) are squared hinges, and
+a concave x(1-x) penalty (the paper's (32b)) pushes X to binary.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .system import device_rate
+from .types import SystemParams
+
+_EPS = 1e-12
+
+
+class PGDConfig(NamedTuple):
+    steps: int = 800
+    lr: float = 0.08
+    penalty_rate: float = 10.0
+    penalty_binary: float = 0.3
+    temp_end: float = 0.25  # final softmax temperature (anneals from 1.0)
+
+
+def _adam_update(g, m, v, t, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * jnp.square(g)
+    mhat = m / (1 - b1**t)
+    vhat = v / (1 - b2**t)
+    return -lr * mhat / (jnp.sqrt(vhat) + eps), m, v
+
+
+def _logit(p):
+    p = jnp.clip(p, 1e-5, 1.0 - 1e-5)
+    return jnp.log(p) - jnp.log1p(-p)
+
+
+def _budgeted_power(params: SystemParams, P_raw, w_tot):
+    """P = P_raw * min(1, B_n / sum P_raw) with learnable budget B_n."""
+    budget = params.p_max * jax.nn.sigmoid(w_tot)            # (N,)
+    tot = jnp.maximum(jnp.sum(P_raw, -1), _EPS)
+    return P_raw * jnp.minimum(1.0, budget / tot)[:, None]
+
+
+def _decode(params: SystemParams, z, w, w_tot, temp):
+    """(z logits (N+1,K), w (N,K), w_tot (N,)) -> feasible (P, X)."""
+    x_full = jax.nn.softmax(z / temp, axis=0)        # (N+1, K)
+    X = x_full[:-1]                                  # drop the "unassigned" row
+    q = float(params.q)
+    P_raw = params.p_max[:, None] * (X**q) * jax.nn.sigmoid(w)
+    return _budgeted_power(params, P_raw, w_tot), X
+
+
+def solve_p4_pgd(
+    params: SystemParams,
+    kappa1,
+    payload: jnp.ndarray,     # D_n + rho C_n  [bits]
+    rmin: jnp.ndarray,        # (N,)
+    P0: jnp.ndarray,
+    X0: jnp.ndarray,
+    cfg: PGDConfig = PGDConfig(),
+):
+    """Minimise kappa1 sum_n (sum_k p)(payload)/r_n  s.t. P1's comms constraints."""
+
+    def loss(z, w, w_tot, temp):
+        P, X = _decode(params, z, w, w_tot, temp)
+        r = device_rate(params, P, X)
+        frac = jnp.sum(P, -1) * payload / jnp.maximum(r, _EPS)
+        hinge = jnp.square(jnp.maximum(rmin - r, 0.0) / jnp.maximum(rmin, 1.0))
+        binary = jnp.sum(X * (1.0 - X))
+        return (
+            kappa1 * jnp.sum(frac)
+            + cfg.penalty_rate * jnp.sum(hinge)
+            + cfg.penalty_binary * binary
+        )
+
+    # warm start from (P0, X0)
+    x_aug = jnp.concatenate(
+        [jnp.clip(X0, 1e-3, 1.0), jnp.maximum(1.0 - jnp.sum(X0, 0, keepdims=True), 1e-3)], 0
+    )
+    z = jnp.log(x_aug)
+    w = _logit(P0 / jnp.maximum(params.p_max[:, None] * jnp.clip(X0, 1e-3, 1.0) ** 2, _EPS))
+    w_tot = _logit(jnp.sum(P0, -1) / params.p_max * 1.2)
+
+    grad_fn = jax.grad(loss, argnums=(0, 1, 2))
+
+    def step(state, i):
+        z, w, w_tot, moms = state
+        t = i + 1
+        frac_done = i / max(cfg.steps - 1, 1)
+        temp = 1.0 + (cfg.temp_end - 1.0) * frac_done
+        gz, gw, gt = grad_fn(z, w, w_tot, temp)
+        (mz, vz), (mw, vw), (mt, vt) = moms
+        dz, mz, vz = _adam_update(gz, mz, vz, t, cfg.lr)
+        dw, mw, vw = _adam_update(gw, mw, vw, t, cfg.lr)
+        dt, mt, vt = _adam_update(gt, mt, vt, t, cfg.lr)
+        return (z + dz, w + dw, w_tot + dt, ((mz, vz), (mw, vw), (mt, vt))), None
+
+    zeros = lambda x: (jnp.zeros_like(x), jnp.zeros_like(x))
+    state = (z, w, w_tot, (zeros(z), zeros(w), zeros(w_tot)))
+    state, _ = jax.lax.scan(step, state, jnp.arange(cfg.steps, dtype=jnp.float32))
+    P, X = _decode(params, state[0], state[1], state[2], cfg.temp_end)
+    return P, X
+
+
+def power_given_x(
+    params: SystemParams,
+    kappa1,
+    payload: jnp.ndarray,
+    rmin: jnp.ndarray,
+    X: jnp.ndarray,           # binary (N, K)
+    P0: jnp.ndarray | None = None,
+    steps: int = 600,
+    lr: float = 0.08,
+    penalty_rate: float = 10.0,
+):
+    """Re-optimise powers after hardening X to binary (per-device separable)."""
+
+    def decode(w, w_tot):
+        P_raw = params.p_max[:, None] * X * jax.nn.sigmoid(w)
+        return _budgeted_power(params, P_raw, w_tot)
+
+    def loss(w, w_tot):
+        P = decode(w, w_tot)
+        r = device_rate(params, P, X)
+        frac = jnp.sum(P, -1) * payload / jnp.maximum(r, _EPS)
+        hinge = jnp.square(jnp.maximum(rmin - r, 0.0) / jnp.maximum(rmin, 1.0))
+        return kappa1 * jnp.sum(frac) + penalty_rate * jnp.sum(hinge)
+
+    if P0 is None:
+        P0 = params.p_max[:, None] * X * 0.25
+    w = _logit(P0 / jnp.maximum(params.p_max[:, None] * X, _EPS))
+    w_tot = _logit(jnp.sum(P0, -1) / params.p_max * 1.2)
+    grad_fn = jax.grad(loss, argnums=(0, 1))
+
+    def step(state, i):
+        w, w_tot, m, v, mt, vt = state
+        g, gt = grad_fn(w, w_tot)
+        dw, m, v = _adam_update(g, m, v, i + 1, lr)
+        dt, mt, vt = _adam_update(gt, mt, vt, i + 1, lr)
+        return (w + dw, w_tot + dt, m, v, mt, vt), None
+
+    state = (w, w_tot, jnp.zeros_like(w), jnp.zeros_like(w),
+             jnp.zeros_like(w_tot), jnp.zeros_like(w_tot))
+    state, _ = jax.lax.scan(step, state, jnp.arange(steps, dtype=jnp.float32))
+    return decode(state[0], state[1])

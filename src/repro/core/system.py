@@ -1,0 +1,124 @@
+"""FedSem system model: OFDMA rates, FL/SemCom energy & delay, objective (P1).
+
+All functions are pure jnp over `SystemParams` / `Allocation` pytrees and are
+safe under jit/vmap/grad. Equation numbers reference the paper.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .accuracy import AccuracyFn, default_accuracy
+from .types import Allocation, SystemParams, Weights
+
+_EPS = 1e-12
+_LN2 = 0.6931471805599453
+
+
+def subcarrier_rate(params: SystemParams, P: jnp.ndarray) -> jnp.ndarray:
+    """r_{n,k}(p) = Bbar log2(1 + p g / (N0 Bbar)).  Eq. (1).  (N, K)."""
+    snr = P * params.g / params.noise_sc
+    return params.bbar * jnp.log1p(snr) / _LN2
+
+
+def device_rate(params: SystemParams, P: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:
+    """r_n = sum_k x_{n,k} r_{n,k}.  Eq. (2).  (N,)."""
+    return jnp.sum(X * subcarrier_rate(params, P), axis=-1)
+
+
+def device_power(P: jnp.ndarray) -> jnp.ndarray:
+    """p_n = sum_k p_{n,k}.  Eq. (3)."""
+    return jnp.sum(P, axis=-1)
+
+
+def fl_tx_time(params: SystemParams, r: jnp.ndarray) -> jnp.ndarray:
+    """tau_n = D_n / r_n.  Eq. (4)."""
+    return params.D / jnp.maximum(r, _EPS)
+
+
+def fl_tx_energy(p_n: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
+    """E^t_n = p_n tau_n.  Eq. (5)."""
+    return p_n * tau
+
+
+def comp_time(params: SystemParams, f: jnp.ndarray) -> jnp.ndarray:
+    """t^c_n = eta c_n d_n / f_n.  Eq. (6)."""
+    return params.eta * params.c * params.d / jnp.maximum(f, _EPS)
+
+
+def comp_energy(params: SystemParams, f: jnp.ndarray) -> jnp.ndarray:
+    """E^c_n = xi eta c_n d_n f_n^2.  Eq. (7)."""
+    return params.xi * params.eta * params.c * params.d * jnp.square(f)
+
+
+def semcom_time(params: SystemParams, rho, r: jnp.ndarray) -> jnp.ndarray:
+    """T^sc_n = rho C_n / r_n.  Eq. (10)."""
+    return rho * params.C / jnp.maximum(r, _EPS)
+
+
+def semcom_energy(params: SystemParams, rho, p_n, r) -> jnp.ndarray:
+    """E^sc_n = p_n rho C_n / r_n.  Eq. (12)."""
+    return p_n * semcom_time(params, rho, r)
+
+
+def t_fl(params: SystemParams, alloc: Allocation) -> jnp.ndarray:
+    """T_FL = max_n (tau_n + t^c_n).  Eq. (8)."""
+    r = device_rate(params, alloc.P, alloc.X)
+    return jnp.max(fl_tx_time(params, r) + comp_time(params, alloc.f))
+
+
+def energy_breakdown(params: SystemParams, alloc: Allocation):
+    """Per-device (E^t, E^c, E^sc) tuple, each (N,)."""
+    r = device_rate(params, alloc.P, alloc.X)
+    p_n = device_power(alloc.P)
+    e_t = fl_tx_energy(p_n, fl_tx_time(params, r))
+    e_c = comp_energy(params, alloc.f)
+    e_sc = semcom_energy(params, alloc.rho, p_n, r)
+    return e_t, e_c, e_sc
+
+
+def objective(
+    params: SystemParams,
+    weights: Weights,
+    alloc: Allocation,
+    accuracy: AccuracyFn | None = None,
+) -> jnp.ndarray:
+    """P1's objective, eq. (13): k1 Sum E_n + k2 T_FL - k3 Sum A_n(rho)."""
+    acc = accuracy or default_accuracy()
+    e_t, e_c, e_sc = energy_breakdown(params, alloc)
+    total_e = jnp.sum(e_t + e_c + e_sc)
+    t = t_fl(params, alloc)
+    a = jnp.sum(jnp.broadcast_to(acc.value(alloc.rho), (params.N,)))
+    return weights.kappa1 * total_e + weights.kappa2 * t - weights.kappa3 * a
+
+
+def report(params: SystemParams, weights: Weights, alloc: Allocation,
+           accuracy: AccuracyFn | None = None) -> dict:
+    """Scalar diagnostics used by benchmarks / EXPERIMENTS.md."""
+    acc = accuracy or default_accuracy()
+    e_t, e_c, e_sc = energy_breakdown(params, alloc)
+    r = device_rate(params, alloc.P, alloc.X)
+    return {
+        "objective": objective(params, weights, alloc, acc),
+        "energy_total": jnp.sum(e_t + e_c + e_sc),
+        "energy_fl_tx": jnp.sum(e_t),
+        "energy_fl_comp": jnp.sum(e_c),
+        "energy_semcom": jnp.sum(e_sc),
+        "t_fl": t_fl(params, alloc),
+        "t_sc_max_dev": jnp.max(semcom_time(params, alloc.rho, r)),
+        "accuracy": acc.value(alloc.rho),
+        "rho": alloc.rho,
+        "min_rate": jnp.min(r),
+    }
+
+
+def feasible(params: SystemParams, alloc: Allocation, tol: float = 1e-4) -> jnp.ndarray:
+    """Boolean feasibility of constraints (13a)-(13g) (X treated as binary>=.5)."""
+    xb = alloc.X > 0.5
+    ok_pow_sc = jnp.all(alloc.P <= jnp.where(xb, params.p_max[:, None], 0.0) * (1 + tol) + _EPS)
+    ok_pow = jnp.all(device_power(alloc.P) <= params.p_max * (1 + tol))
+    ok_f = jnp.all(alloc.f <= params.f_max * (1 + tol))
+    ok_sc = jnp.all(jnp.sum(xb, axis=0) <= 1)
+    r = device_rate(params, alloc.P, alloc.X)
+    ok_tsc = jnp.all(semcom_time(params, alloc.rho, r) <= params.t_sc_max * (1 + tol))
+    ok_rho = (alloc.rho <= 1.0 + tol) & (alloc.rho >= 0.0)
+    return ok_pow_sc & ok_pow & ok_f & ok_sc & ok_tsc & ok_rho

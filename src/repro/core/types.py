@@ -1,0 +1,108 @@
+"""Pytree dataclasses for the FedSem wireless system (paper Table I).
+
+Everything is a registered JAX pytree so the whole allocator jits and vmaps
+over batches of channel realisations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# unit helpers
+# ---------------------------------------------------------------------------
+
+
+def dbm_to_watt(dbm):
+    return 10.0 ** ((jnp.asarray(dbm, jnp.float32) - 30.0) / 10.0)
+
+
+def db_to_linear(db):
+    return 10.0 ** (jnp.asarray(db, jnp.float32) / 10.0)
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["g", "c", "d", "D", "C", "p_max", "f_max", "t_sc_max"],
+    meta_fields=["N", "K", "B", "N0", "xi", "eta", "q"],
+)
+@dataclasses.dataclass(frozen=True)
+class SystemParams:
+    """Static description of one FedSem wireless scenario.
+
+    Shapes: ``g`` is (N, K) channel gain (linear); ``c, d, D, C, p_max,
+    f_max, t_sc_max`` are (N,).
+
+    Meta (python scalars, hashable for jit):
+      N devices, K subcarriers, B total bandwidth [Hz], N0 noise PSD [W/Hz],
+      xi effective switched capacitance, eta local iterations,
+      q binary-tightening exponent of (35a).
+    """
+
+    g: jax.Array
+    c: jax.Array        # CPU cycles / sample
+    d: jax.Array        # samples per device
+    D: jax.Array        # FL upload size [bits]
+    C: jax.Array        # total SemCom payload L * C_{n,l} [bits]
+    p_max: jax.Array    # [W]
+    f_max: jax.Array    # [Hz]
+    t_sc_max: jax.Array  # SemCom deadline [s]
+    N: int = 10
+    K: int = 50
+    B: float = 20e6
+    N0: float = 10.0 ** ((-174.0 - 30.0) / 10.0)
+    xi: float = 1e-28
+    eta: int = 10
+    q: int = 2
+
+    @property
+    def bbar(self) -> float:
+        """Per-subcarrier bandwidth B/K [Hz]."""
+        return self.B / self.K
+
+    @property
+    def noise_sc(self) -> float:
+        """Noise power per subcarrier N0 * Bbar [W]."""
+        return self.N0 * self.bbar
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["kappa1", "kappa2", "kappa3"],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class Weights:
+    """Objective weights (kappa1 [1/J], kappa2 [1/s], kappa3 [unitless])."""
+
+    kappa1: jax.Array
+    kappa2: jax.Array
+    kappa3: jax.Array
+
+    @staticmethod
+    def ones() -> "Weights":
+        one = jnp.float32(1.0)
+        return Weights(one, one, one)
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["f", "P", "X", "rho"],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class Allocation:
+    """Decision variables of problem P1.
+
+    f: (N,) CPU frequency [Hz]; P: (N, K) transmit power [W];
+    X: (N, K) subcarrier indicator (relaxed in [0,1] inside the solver,
+    ~binary at the end); rho: scalar compression rate in (0, 1].
+    """
+
+    f: jax.Array
+    P: jax.Array
+    X: jax.Array
+    rho: jax.Array

@@ -1,0 +1,95 @@
+"""Synthetic data pipelines (no external datasets in this container).
+
+Images: structured scenes — coloured rectangles + smooth background + texture
+noise — so compression rate genuinely trades off reconstruction quality.
+Tokens: Zipf-distributed LM streams with markovian bigram structure so
+cross-entropy decreases meaningfully during the example training runs.
+
+Both are pure-JAX keyed generators: deterministic, shardable, no host state.
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def image_batch(key: jax.Array, batch: int, size: int = 32, channels: int = 3):
+    """(B, H, W, C) images in [-1, 1]."""
+    k_bg, k_rect, k_col, k_noise = jax.random.split(key, 4)
+
+    # smooth background: low-frequency gradient per image
+    coef = jax.random.normal(k_bg, (batch, 2, channels)) * 0.4
+    yy, xx = jnp.mgrid[0:size, 0:size] / size
+    bg = (
+        coef[:, 0, None, None, :] * yy[None, :, :, None]
+        + coef[:, 1, None, None, :] * xx[None, :, :, None]
+    )
+
+    # 3 random rectangles per image
+    def rects(key):
+        ks = jax.random.split(key, 3)
+        img = jnp.zeros((size, size, channels))
+        for i in range(3):
+            ka, kb = jax.random.split(ks[i])
+            c0 = jax.random.randint(ka, (2,), 0, size - 8)
+            wh = jax.random.randint(kb, (2,), 4, size // 2)
+            col = jax.random.uniform(jax.random.fold_in(kb, 7), (channels,), minval=-1, maxval=1)
+            yy2, xx2 = jnp.mgrid[0:size, 0:size]
+            mask = (
+                (yy2 >= c0[0]) & (yy2 < c0[0] + wh[0])
+                & (xx2 >= c0[1]) & (xx2 < c0[1] + wh[1])
+            )
+            img = jnp.where(mask[:, :, None], col[None, None, :], img)
+        return img
+
+    fg = jax.vmap(rects)(jax.random.split(k_rect, batch))
+    noise = 0.05 * jax.random.normal(k_noise, (batch, size, size, channels))
+    return jnp.clip(bg + fg + noise, -1.0, 1.0)
+
+
+def image_stream(key: jax.Array, batch: int, size: int = 32) -> Iterator[jnp.ndarray]:
+    i = 0
+    while True:
+        yield image_batch(jax.random.fold_in(key, i), batch, size)
+        i += 1
+
+
+def make_bigram_table(key: jax.Array, vocab: int, concentration: float = 0.5):
+    """Row-stochastic bigram logits with Zipf-ish marginals."""
+    base = -jnp.log(jnp.arange(1, vocab + 1, dtype=jnp.float32))  # Zipf prior
+    noise = jax.random.gumbel(key, (vocab, vocab)) * concentration
+    return base[None, :] + noise
+
+
+def token_batch(key: jax.Array, table: jnp.ndarray, batch: int, seq: int):
+    """(B, S+1) int32 tokens from the bigram chain (inputs + shifted labels)."""
+    vocab = table.shape[0]
+    k0, kseq = jax.random.split(key)
+    first = jax.random.categorical(k0, jnp.broadcast_to(table[0], (batch, vocab)))
+
+    def step(tok, k):
+        nxt = jax.random.categorical(k, table[tok])
+        return nxt, nxt
+
+    keys = jax.random.split(kseq, seq)
+    _, rest = jax.lax.scan(step, first, keys)
+    return jnp.concatenate([first[None, :], rest], axis=0).T.astype(jnp.int32)
+
+
+def token_stream(key, vocab: int, batch: int, seq: int) -> Iterator[jnp.ndarray]:
+    table = make_bigram_table(jax.random.fold_in(key, 999), vocab)
+    i = 0
+    while True:
+        yield token_batch(jax.random.fold_in(key, i), table, batch, seq)
+        i += 1
+
+
+def partition_clients(key: jax.Array, n_clients: int, pool: int = 1024,
+                      alpha: float = 0.5) -> np.ndarray:
+    """Dirichlet non-IID client shares (used by the FL driver's d_n)."""
+    g = jax.random.gamma(key, jnp.full((n_clients,), alpha))
+    share = g / jnp.sum(g)
+    return np.asarray(jnp.maximum((share * pool).astype(jnp.int32), 16))

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: FedSem objective (eq. 13) over a grid of candidates.
+
+The exhaustive / random-search baselines evaluate the P1 objective for ~1e8
+candidate allocations; this is the paper-core's only compute hot-spot
+(DESIGN.md §4). Layout is transposed to (N, G) so the candidate axis G sits on
+the 128-wide lane dimension of the VPU; device axis N (4..16) rides sublanes.
+Each grid step processes a (N, BG) VMEM tile; the N-reductions and max happen
+on-chip, emitting a (1, BG) objective tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-12
+BLOCK_G = 512  # lane-aligned candidate tile (4 x 128)
+
+
+def _kernel(
+    f_ref, p_ref, r_ref, rho_ref,       # (N, BG), (N, BG), (N, BG), (1, BG)
+    c_ref, d_ref, D_ref, C_ref, tsc_ref, fmax_ref,  # (N, 1) each
+    obj_ref,                            # out: (1, BG)
+    *, xi: float, eta: float, k1: float, k2: float, k3: float,
+    a_acc: float, b_acc: float,
+):
+    f = f_ref[...]
+    p = p_ref[...]
+    r = jnp.maximum(r_ref[...], _EPS)
+    rho = rho_ref[...]                  # (1, BG)
+
+    cd = c_ref[...] * d_ref[...]        # (N, 1)
+    tau = D_ref[...] / r
+    t_c = eta * cd / jnp.maximum(f, _EPS)
+    e_t = p * tau
+    e_c = xi * eta * cd * (f * f)
+    e_sc = p * rho * C_ref[...] / r
+    t_fl = jnp.max(tau + t_c, axis=0, keepdims=True)          # (1, BG)
+    acc = a_acc * jnp.exp(b_acc * jnp.log(jnp.maximum(rho, 1e-9)))
+    n_dev = f.shape[0]
+
+    obj = (
+        k1 * jnp.sum(e_t + e_c + e_sc, axis=0, keepdims=True)
+        + k2 * t_fl
+        - k3 * n_dev * acc
+    )
+    t_sc = rho * C_ref[...] / r
+    bad = jnp.any(t_sc > tsc_ref[...], axis=0, keepdims=True) | jnp.any(
+        f > fmax_ref[...] * (1.0 + 1e-6), axis=0, keepdims=True
+    )
+    obj_ref[...] = jnp.where(bad, jnp.inf, obj)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("xi", "eta", "k1", "k2", "k3", "a_acc", "b_acc", "interpret"),
+)
+def objective_grid_pallas(
+    f_t, p_t, r_t, rho,                 # (N, G) x3, (G,)
+    c, d, D, C, t_sc_max, f_max,        # (N,) each
+    *, xi, eta, k1, k2, k3, a_acc, b_acc, interpret: bool = False,
+):
+    N, G = f_t.shape
+    assert G % BLOCK_G == 0, "pad G to a multiple of BLOCK_G before calling"
+    col = lambda v: jnp.asarray(v, jnp.float32).reshape(N, 1)
+    rho2 = jnp.asarray(rho, jnp.float32).reshape(1, G)
+
+    grid = (G // BLOCK_G,)
+    cand_spec = pl.BlockSpec((N, BLOCK_G), lambda i: (0, i))
+    row_spec = pl.BlockSpec((1, BLOCK_G), lambda i: (0, i))
+    vec_spec = pl.BlockSpec((N, 1), lambda i: (0, 0))
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, xi=xi, eta=eta, k1=k1, k2=k2, k3=k3, a_acc=a_acc, b_acc=b_acc
+        ),
+        grid=grid,
+        in_specs=[cand_spec, cand_spec, cand_spec, row_spec] + [vec_spec] * 6,
+        out_specs=row_spec,
+        out_shape=jax.ShapeDtypeStruct((1, G), jnp.float32),
+        interpret=interpret,
+    )(
+        f_t.astype(jnp.float32),
+        p_t.astype(jnp.float32),
+        r_t.astype(jnp.float32),
+        rho2,
+        col(c), col(d), col(D), col(C), col(t_sc_max), col(f_max),
+    )
+    return out[0]

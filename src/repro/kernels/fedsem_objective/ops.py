@@ -1,0 +1,54 @@
+"""jit'd public wrapper for the FedSem objective grid.
+
+Dispatch: on TPU the Pallas kernel runs compiled; elsewhere we use the pure
+jnp oracle (`ref.py`) — Pallas-in-interpret-mode is for correctness tests,
+not for the 1e8-candidate exhaustive sweeps on one CPU core.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def _pad_to(x, g_pad, axis=0, fill=0.0):
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, g_pad - x.shape[axis])
+    return jnp.pad(x, pad, constant_values=fill)
+
+
+def objective_grid(
+    f, p, r, rho,
+    c, d, D, C, t_sc_max, f_max,
+    xi: float, eta: float,
+    kappa1: float, kappa2: float, kappa3: float,
+    accuracy_ab=(0.6356, 0.4025),
+    *,
+    use_pallas: str | bool = "auto",
+    interpret: bool = False,
+):
+    """Objective (eq. 13) for G candidates. f/p/r: (G, N); rho: (G,)."""
+    if use_pallas == "auto":
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return ref.objective_grid(
+            f, p, r, rho, c, d, D, C, t_sc_max, f_max,
+            xi, eta, kappa1, kappa2, kappa3, accuracy_ab,
+        )
+
+    G = f.shape[0]
+    g_pad = -(-G // kernel.BLOCK_G) * kernel.BLOCK_G
+    f_t = _pad_to(jnp.asarray(f, jnp.float32), g_pad).T
+    p_t = _pad_to(jnp.asarray(p, jnp.float32), g_pad).T
+    r_t = _pad_to(jnp.asarray(r, jnp.float32), g_pad, fill=1.0).T
+    rho_p = _pad_to(jnp.asarray(rho, jnp.float32), g_pad, fill=1.0)
+    a_acc, b_acc = accuracy_ab
+    out = kernel.objective_grid_pallas(
+        f_t, p_t, r_t, rho_p, c, d, D, C, t_sc_max, f_max,
+        xi=float(xi), eta=float(eta),
+        k1=float(kappa1), k2=float(kappa2), k3=float(kappa3),
+        a_acc=float(a_acc), b_acc=float(b_acc),
+        interpret=interpret,
+    )
+    return out[:G]

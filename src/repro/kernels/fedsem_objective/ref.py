@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the FedSem objective grid evaluation.
+
+Evaluates P1's objective (eq. 13) for G candidate allocations at once:
+  f (G,N) CPU freq, p (G,N) per-device total power, r (G,N) device rate,
+  rho (G,) compression rate. Infeasible candidates (SemCom deadline or f_max
+  violations) evaluate to +inf.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def objective_grid(
+    f, p, r, rho,
+    c, d, D, C, t_sc_max, f_max,
+    xi: float, eta: float,
+    kappa1: float, kappa2: float, kappa3: float,
+    accuracy_ab=(0.6356, 0.4025),
+):
+    f = jnp.asarray(f, jnp.float32)
+    p = jnp.asarray(p, jnp.float32)
+    r = jnp.maximum(jnp.asarray(r, jnp.float32), _EPS)
+    rho = jnp.asarray(rho, jnp.float32)[:, None]
+    a_acc, b_acc = accuracy_ab
+
+    cd = (c * d)[None, :]                      # (1, N)
+    tau = D[None, :] / r                       # FL upload delay
+    t_c = eta * cd / jnp.maximum(f, _EPS)
+    e_t = p * tau
+    e_c = xi * eta * cd * jnp.square(f)
+    e_sc = p * rho * C[None, :] / r
+    t_fl = jnp.max(tau + t_c, axis=-1)         # (G,)
+    acc = a_acc * jnp.power(jnp.maximum(rho[:, 0], 1e-9), b_acc)
+    N = f.shape[-1]
+
+    obj = (
+        kappa1 * jnp.sum(e_t + e_c + e_sc, axis=-1)
+        + kappa2 * t_fl
+        - kappa3 * N * acc
+    )
+    t_sc = rho * C[None, :] / r
+    bad = jnp.any(t_sc > t_sc_max[None, :], axis=-1) | jnp.any(
+        f > f_max[None, :] * (1 + 1e-6), axis=-1
+    )
+    return jnp.where(bad, jnp.inf, obj)

@@ -1,0 +1,110 @@
+"""Pallas TPU flash attention (forward) with GQA, causal/sliding-window masks
+and gemma-style logit softcap.
+
+Grid = (B, H, S/bq, S/bk); the kv-block axis is innermost so each (b, h, iq)
+accumulates over kv blocks sequentially with running max / denominator held in
+VMEM scratch (the standard flash recipe re-tiled for the MXU: bq x bk score
+tiles with hd-contracted matmuls, 128-aligned).
+
+GQA rides the BlockSpec index_map: the k/v block for query head h is
+h // (H // KV) — no head replication in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, scale, causal, window, cap, bq, bk, n_k, s_valid):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                      # (bq, bk)
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < s_valid                       # exclude padded kv positions
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)[:, None]
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "cap", "bq", "bk", "interpret", "s_valid"),
+)
+def flash_attention_pallas(
+    q, k, v, *, causal=True, window=None, cap=None,
+    bq=DEFAULT_BQ, bk=DEFAULT_BK, interpret=False, s_valid=None,
+):
+    """q: (B, H, S, hd); k/v: (B, KV, S, hd); S % bq == S % bk == 0."""
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    n_q, n_k = S // bq, S // bk
+    grid = (B, H, n_q, n_k)
+    scale = 1.0 / (hd**0.5)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, cap=cap,
+        bq=bq, bk=bk, n_k=n_k, s_valid=s_valid if s_valid is not None else S,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),   # acc
+            pltpu.VMEM((bq,), jnp.float32),      # running max
+            pltpu.VMEM((bq,), jnp.float32),      # running denominator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,45 @@
+"""Public flash-attention op: Pallas on TPU, chunked-jnp elsewhere.
+
+Accepts model-layout tensors q:(B,S,H,hd), k/v:(B,S,KV,hd); handles padding to
+block multiples and the layout transpose the kernel wants.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel
+
+
+def flash_attention(
+    q, k, v, *, causal=True, window=None, cap=None,
+    use_pallas: str | bool = "auto", interpret: bool = False,
+    bq: int = kernel.DEFAULT_BQ, bk: int = kernel.DEFAULT_BK,
+):
+    if use_pallas == "auto":
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        from repro.models.attention import flash_attention as jnp_flash
+
+        S = q.shape[1]
+        pos = jnp.arange(S, dtype=jnp.int32)
+        return jnp_flash(
+            q, k, v, q_positions=pos, kv_positions=pos,
+            causal=causal, window=window, cap=cap,
+        )
+
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    s_pad = -(-S // max(bq, bk)) * max(bq, bk)
+    pad = s_pad - S
+
+    def prep(x):
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x.transpose(0, 2, 1, 3)  # (B, heads, S, hd)
+
+    out = kernel.flash_attention_pallas(
+        prep(q), prep(k), prep(v),
+        causal=causal, window=window, cap=cap, bq=bq, bk=bk,
+        interpret=interpret, s_valid=S,
+    )
+    return out.transpose(0, 2, 1, 3)[:, :S]

@@ -1,0 +1,27 @@
+"""Naive O(S^2) attention oracle (independent of the chunked jnp path)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def naive_attention(q, k, v, *, causal=True, window=None, cap=None):
+    """q: (B,S,H,hd); k/v: (B,S,KV,hd). Returns (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, S, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k.astype(jnp.float32)) / jnp.sqrt(hd)
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(v.dtype)

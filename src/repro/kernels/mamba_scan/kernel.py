@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: Mamba selective scan, chunked over time.
+
+Grid = (B, d_inner/bd, S/ct); time chunks innermost carrying the per-channel
+state h (bd, N) in VMEM scratch. The (B, S, d_inner, N) tensor a naive
+implementation would materialise (terabytes at Jamba scale) never exists: each
+chunk streams (x, dt, B, C) tiles through VMEM and emits y only.
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;   y_t = C_t h_t + D x_t
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CT = 128
+DEFAULT_BD = 512
+
+
+def _kernel(x_ref, dt_ref, b_ref, c_ref, A_ref, D_ref, y_ref, h_ref, *, ct):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    A = A_ref[...].astype(jnp.float32)            # (bd, N)
+    D = D_ref[...].astype(jnp.float32)            # (bd, 1)
+
+    def step(t, h):
+        x_t = x_ref[0, t].astype(jnp.float32)     # (bd,)
+        dt_t = dt_ref[0, t].astype(jnp.float32)   # (bd,)
+        B_t = b_ref[0, t].astype(jnp.float32)     # (N,)
+        C_t = c_ref[0, t].astype(jnp.float32)     # (N,)
+        da = jnp.exp(dt_t[:, None] * A)           # (bd, N)
+        h = da * h + (dt_t * x_t)[:, None] * B_t[None, :]
+        y = jnp.sum(h * C_t[None, :], axis=-1) + D[:, 0] * x_t
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        return h
+
+    h_ref[...] = jax.lax.fori_loop(0, ct, step, h_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("ct", "bd", "interpret"))
+def mamba_scan_pallas(x, dt, Bm, Cm, A, D, *, ct=DEFAULT_CT, bd=DEFAULT_BD,
+                      interpret=False):
+    """x, dt: (B, S, di); Bm, Cm: (B, S, N); A: (di, N); D: (di,).
+
+    Returns y: (B, S, di). di % bd == 0, S % ct == 0.
+    """
+    B, S, di = x.shape
+    N = Bm.shape[-1]
+    assert S % ct == 0 and di % bd == 0
+    grid = (B, di // bd, S // ct)
+
+    chan_spec = pl.BlockSpec((1, ct, bd), lambda b, id_, ic: (b, ic, id_))
+    bc_spec = pl.BlockSpec((1, ct, N), lambda b, id_, ic: (b, ic, 0))
+    A_spec = pl.BlockSpec((bd, N), lambda b, id_, ic: (id_, 0))
+    D_spec = pl.BlockSpec((bd, 1), lambda b, id_, ic: (id_, 0))
+
+    return pl.pallas_call(
+        functools.partial(_kernel, ct=ct),
+        grid=grid,
+        in_specs=[chan_spec, chan_spec, bc_spec, bc_spec, A_spec, D_spec],
+        out_specs=chan_spec,
+        out_shape=jax.ShapeDtypeStruct((B, S, di), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, Bm, Cm, A, D.reshape(di, 1))

@@ -1,0 +1,27 @@
+"""Public selective-scan op: Pallas on TPU, lax.scan oracle elsewhere."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def mamba_scan(x, dt, Bm, Cm, A, D, *, use_pallas: str | bool = "auto",
+               interpret: bool = False, ct: int = kernel.DEFAULT_CT,
+               bd: int = kernel.DEFAULT_BD):
+    if use_pallas == "auto":
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return ref.mamba_scan_ref(x, dt, Bm, Cm, A, D)[0]
+    B, S, di = x.shape
+    bd = min(bd, di)
+    pad = (-S) % ct
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))   # dt=0 => state frozen
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    out = kernel.mamba_scan_pallas(x, dt, Bm, Cm, A, D, ct=ct, bd=bd,
+                                   interpret=interpret)
+    return out[:, :S]

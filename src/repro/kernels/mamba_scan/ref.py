@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the selective scan (sequential lax.scan)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(x, dt, Bm, Cm, A, D, h0=None):
+    """x, dt: (B,S,di); Bm, Cm: (B,S,N); A: (di,N); D: (di,).
+
+    Returns (y: (B,S,di), final h: (B,di,N)).
+    """
+    B, S, di = x.shape
+    N = Bm.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((B, di, N), jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = (v.astype(jnp.float32) for v in inp)
+        da = jnp.exp(dt_t[..., None] * Af)
+        h = da * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t) + D * x_t
+        return h, y
+
+    seq = (x.swapaxes(0, 1), dt.swapaxes(0, 1), Bm.swapaxes(0, 1), Cm.swapaxes(0, 1))
+    h, ys = jax.lax.scan(step, h0, seq)
+    return ys.swapaxes(0, 1).astype(x.dtype), h

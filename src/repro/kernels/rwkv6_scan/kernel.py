@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: RWKV6 WKV recurrence, chunked over time.
+
+Grid = (B, H, S/ct); the time-chunk axis is innermost/sequential, carrying the
+per-head state S in VMEM scratch (hd x hd fp32) across chunks — the classic
+"state stays on-chip, activations stream through" TPU layout for linear
+attention. Inside a chunk the recurrence is a fori_loop over ct steps of
+rank-1 updates (VPU work; hd = 64 keeps the state tile register-friendly).
+
+    y_t = r_t (S + diag(u) k_t^T v_t)
+    S  <- diag(w_t) S + k_t^T v_t
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CT = 128
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, state_ref, *, ct):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    u = u_ref[0, 0].astype(jnp.float32)           # (hd,) bonus
+
+    def step(t, S):
+        r_t = r_ref[0, 0, t].astype(jnp.float32)  # (hd,)
+        k_t = k_ref[0, 0, t].astype(jnp.float32)
+        v_t = v_ref[0, 0, t].astype(jnp.float32)
+        w_t = w_ref[0, 0, t].astype(jnp.float32)
+        kv = k_t[:, None] * v_t[None, :]          # (hd, hd)
+        y = jnp.sum((S + u[:, None] * kv) * r_t[:, None], axis=0)
+        o_ref[0, 0, t] = y.astype(o_ref.dtype)
+        return w_t[:, None] * S + kv
+
+    state_ref[...] = jax.lax.fori_loop(0, ct, step, state_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("ct", "interpret"))
+def rwkv6_scan_pallas(r, k, v, w, u, *, ct=DEFAULT_CT, interpret=False):
+    """r/k/v/w: (B, H, S, hd); u: (H, hd). Returns y: (B, H, S, hd).
+
+    w is the per-step decay in (0, 1) (already exp(-exp(.))-transformed).
+    """
+    B, H, S, hd = r.shape
+    assert S % ct == 0
+    grid = (B, H, S // ct)
+    seq_spec = pl.BlockSpec((1, 1, ct, hd), lambda b, h, ic: (b, h, ic, 0))
+    u_spec = pl.BlockSpec((1, 1, hd), lambda b, h, ic: (h, 0, 0))
+
+    return pl.pallas_call(
+        functools.partial(_kernel, ct=ct),
+        grid=grid,
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec, u_spec],
+        out_specs=seq_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), r.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u.reshape(H, 1, hd))

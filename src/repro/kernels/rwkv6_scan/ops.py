@@ -1,0 +1,25 @@
+"""Public WKV6 op: Pallas on TPU, lax.scan oracle elsewhere."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def rwkv6_scan(r, k, v, w, u, *, use_pallas: str | bool = "auto",
+               interpret: bool = False, ct: int = kernel.DEFAULT_CT):
+    if use_pallas == "auto":
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return ref.rwkv6_scan_ref(r, k, v, w, u)[0]
+    B, H, S, hd = r.shape
+    pad = (-S) % ct
+    if pad:
+        r, k, v, w = (
+            jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0))) for x in (r, k, v, w)
+        )
+        # pad decay with ones so the state is untouched by padded steps
+        w = w.at[:, :, S:].set(1.0)
+    out = kernel.rwkv6_scan_pallas(r, k, v, w, u, ct=ct, interpret=interpret)
+    return out[:, :, :S]

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the WKV6 recurrence (sequential lax.scan)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r, k, v, w, u, state=None):
+    """r/k/v/w: (B, H, S, hd); u: (H, hd). Returns (y, final_state)."""
+    B, H, S, hd = r.shape
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+    uf = u.astype(jnp.float32)
+
+    def step(S_state, inp):
+        r_t, k_t, v_t, w_t = (x.astype(jnp.float32) for x in inp)  # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S_state + uf[..., :, None] * kv)
+        return w_t[..., :, None] * S_state + kv, y
+
+    seq = tuple(x.transpose(2, 0, 1, 3) for x in (r, k, v, w))
+    final, ys = jax.lax.scan(step, state, seq)
+    return ys.transpose(1, 2, 0, 3).astype(r.dtype), final

@@ -1,0 +1,34 @@
+"""Production meshes (TPU v5e numbers; DESIGN.md §6).
+
+Functions, not module constants — importing this module never touches jax
+device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}; have {len(devices)} — run under "
+            "dryrun.py, which forces XLA_FLAGS=--xla_force_host_platform_device_count=512"
+        )
+    import numpy as np
+
+    return jax.sharding.Mesh(
+        np.asarray(devices[:n]).reshape(shape), axes
+    )
+
+
+# hardware constants (TPU v5e)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (1 link/axis-hop assumed)
+HBM_BYTES = 16 * 1024**3        # 16 GiB per chip

@@ -1,0 +1,120 @@
+"""Input ShapeDtypeStructs per (architecture x input shape) — no allocation.
+
+Shapes (assigned):
+  train_4k     seq 4,096    global_batch 256   (training)
+  prefill_32k  seq 32,768   global_batch 32    (inference-prefill)
+  decode_32k   seq 32,768   global_batch 128   (inference-decode: 1 new token)
+  long_500k    seq 524,288  global_batch 1     (long-context decode)
+
+Skips (DESIGN.md §5): hubert has no decode shapes (encoder-only); the pure
+full-attention decoders (starcoder2 / qwen2.5 / pixtral) run long_500k only as
+their sliding-window variant, which their configs enable.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+
+def shape_skip_reason(cfg: ModelConfig, shape: str) -> str | None:
+    kind = SHAPES[shape]["kind"]
+    if cfg.arch_type == "audio" and kind == "decode":
+        return "encoder-only: no decode step (DESIGN.md §5)"
+    if shape == "long_500k":
+        full_attn = (
+            cfg.block_pattern == ("attn",) and cfg.sliding_window is None
+        )
+        if full_attn:
+            return "pure full attention without SWA variant (DESIGN.md §5)"
+    return None
+
+
+def uses_swa_variant(cfg: ModelConfig, shape: str) -> bool:
+    """Dense full-attention archs run long_500k with their SWA variant."""
+    return (
+        shape == "long_500k"
+        and cfg.block_pattern == ("attn",)
+        and cfg.sliding_window is not None
+        and cfg.arch_type in ("dense", "vlm")
+    )
+
+
+def effective_pattern(cfg: ModelConfig, shape: str) -> ModelConfig:
+    """long_500k on full-attention dense archs -> all-local (SWA) variant."""
+    if uses_swa_variant(cfg, shape):
+        return cfg.scaled(block_pattern=("attn_local",))
+    return cfg
+
+
+def _lcm(a: int, b: int) -> int:
+    import math
+
+    return a * b // math.gcd(a, b)
+
+
+def mesh_adapt(cfg: ModelConfig, model_axis: int) -> ModelConfig:
+    """Pad q heads / replicate kv heads so head axes divide the model axis.
+
+    Zero-padded q heads and repeat-interleaved kv heads compute the *same
+    function* as the original GQA layout (zero heads contribute nothing
+    through wo; each q group still sees its original kv head) — the classic
+    TPU answer to head counts like arctic's 56 on a 16-way tensor-parallel
+    mesh. The padding overhead is surfaced by the MODEL_FLOPS/HLO_FLOPs ratio
+    in §Roofline (DESIGN.md §6).
+    """
+    if cfg.use_mla or not any(k.startswith("attn") for k in cfg.block_pattern):
+        return cfg
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    H_pad = -(-H // model_axis) * model_axis if H % model_axis else H
+    KV_eff = _lcm(KV, model_axis)
+    if KV_eff > H_pad:
+        KV_eff = H_pad
+    if H_pad % KV_eff:
+        KV_eff = H_pad  # degenerate: go MHA
+    if H_pad == H and KV_eff == KV:
+        return cfg
+    return cfg.scaled(n_heads=H_pad, n_kv_heads=KV_eff, head_dim=cfg.hd)
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict[str, Any]:
+    """Batch ShapeDtypeStructs for train/prefill entry points."""
+    info = SHAPES[shape]
+    B, S = info["batch"], info["seq"]
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.frontend == "audio":
+        return {
+            "frame_embeds": jax.ShapeDtypeStruct((B, S, cfg.frontend_dim), jnp.bfloat16),
+            "labels": tok,
+            "mask": jax.ShapeDtypeStruct((B, S), jnp.bool_),
+        }
+    batch = {"tokens": tok, "labels": tok}
+    if cfg.frontend == "vision":
+        n_patch = min(1024, S // 4)
+        batch["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, n_patch, cfg.frontend_dim), jnp.bfloat16
+        )
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape: str):
+    """(token, pos, cache) ShapeDtypeStructs for serve_step."""
+    from repro.models import model as M
+
+    info = SHAPES[shape]
+    B, S = info["batch"], info["seq"]
+    cfg = effective_pattern(cfg, shape)
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, B, S))
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return token, pos, cache

@@ -1,0 +1,290 @@
+"""Attention: GQA (+RoPE, sliding window, softcap, bias) and DeepSeek MLA.
+
+Prefill/train uses a chunked flash-style attention in pure jnp (running
+log-sum-exp over KV chunks — O(S * chunk) memory instead of O(S^2)); it is
+also the oracle for the Pallas flash kernel (`repro.kernels.flash_attention`).
+Decode attends one query over a KV cache; sliding-window layers keep a ring
+buffer of size `window` with explicit kv-position tags, so long_500k local
+layers cache O(window), not O(S) (DESIGN.md §5).
+
+MLA (DeepSeek-V3): low-rank q and kv projections with a decoupled RoPE head.
+The cache stores only (c_kv, k_rope) — ~(kv_lora + rope_dim) per token instead
+of 2*H*hd. Decode uses the absorbed formulation (scores straight from the
+latent without materialising per-head K/V).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, dense_init, rms_norm, softcap
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def init_attn_params(key, cfg, dtype):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H, hd), dtype=dtype),
+        "wk": dense_init(ks[1], (d, KV, hd), dtype=dtype),
+        "wv": dense_init(ks[2], (d, KV, hd), dtype=dtype),
+        "wo": dense_init(ks[3], (H, hd, d), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((KV, hd), dtype)
+        p["bv"] = jnp.zeros((KV, hd), dtype)
+    return p
+
+
+def init_mla_params(key, cfg, dtype):
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    qlr, kvlr, rd = cfg.q_lora_rank, cfg.kv_lora_rank, cfg.qk_rope_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "w_dq": dense_init(ks[0], (d, qlr), dtype=dtype),
+        "q_norm": jnp.zeros((qlr,), dtype),
+        "w_uq": dense_init(ks[1], (qlr, H, hd + rd), dtype=dtype),
+        "w_dkv": dense_init(ks[2], (d, kvlr + rd), dtype=dtype),
+        "kv_norm": jnp.zeros((kvlr,), dtype),
+        "w_uk": dense_init(ks[3], (kvlr, H, hd), dtype=dtype),
+        "w_uv": dense_init(ks[4], (kvlr, H, hd), dtype=dtype),
+        "wo": dense_init(ks[5], (H, hd, d), dtype=dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked flash attention (jnp oracle / CPU path)
+# ---------------------------------------------------------------------------
+
+def flash_attention(
+    q, k, v, *,
+    q_positions, kv_positions,
+    causal: bool = True,
+    window: int | None = None,
+    cap: float | None = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+):
+    """q: (B,S,H,hd); k/v: (B,Skv,KV,hd) with H = G*KV. Returns (B,S,H,hd).
+
+    kv_positions < 0 marks invalid (unwritten ring-buffer) entries.
+    """
+    B, S, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    qp = -(-S // q_chunk) * q_chunk
+    kp = -(-Skv // kv_chunk) * kv_chunk
+    qpad, kpad = qp - S, kp - Skv
+    q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    q_pos = jnp.pad(q_positions, (0, qpad), constant_values=2**30)
+    kv_pos = jnp.pad(kv_positions, (0, kpad), constant_values=-1)
+
+    q = q.reshape(B, qp // q_chunk, q_chunk, KV, G, hd)
+    k = k.reshape(B, kp // kv_chunk, kv_chunk, KV, hd)
+    v = v.reshape(B, kp // kv_chunk, kv_chunk, KV, hd)
+    q_pos = q_pos.reshape(qp // q_chunk, q_chunk)
+    kv_pos = kv_pos.reshape(kp // kv_chunk, kv_chunk)
+
+    @jax.checkpoint  # don't save per-chunk p-matrices for backward (§Perf)
+    def q_step_body(qc_in):
+        qc, qpos_c = qc_in  # (B, qc, KV, G, hd), (qc,)
+
+        def kv_step(carry, kc_in):
+            out, m, l = carry
+            kc, vc, kpos_c = kc_in
+            s = jnp.einsum(
+                "bqkgh,bskh->bkgqs", qc.astype(jnp.float32), kc.astype(jnp.float32)
+            ) * scale
+            if cap is not None:
+                s = softcap(s, cap)
+            mask = kpos_c[None, :] >= 0
+            if causal:
+                mask &= kpos_c[None, :] <= qpos_c[:, None]
+            if window is not None:
+                mask &= qpos_c[:, None] - kpos_c[None, :] < window
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard fully-masked rows
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(jnp.isfinite(s), p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskh->bkgqh", p, vc.astype(jnp.float32))
+            out = out * corr[..., None] + pv
+            return (out, m_new, l), None
+
+        out0 = jnp.zeros((B, KV, G, q_chunk, hd), jnp.float32)
+        m0 = jnp.full((B, KV, G, q_chunk), -jnp.inf)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        (out, m, l), _ = jax.lax.scan(
+            kv_step, (out0, m0, l0),
+            (k.swapaxes(0, 1), v.swapaxes(0, 1), kv_pos),
+        )
+        out = out / jnp.maximum(l[..., None], 1e-20)
+        # cast before stacking: the scan output buffer is S-sized
+        return out.transpose(0, 3, 1, 2, 4).astype(v.dtype)  # (B, qc, KV, G, hd)
+
+    def q_step(_, qc_in):
+        return None, q_step_body(qc_in)
+
+    _, outs = jax.lax.scan(q_step, None, (q.swapaxes(0, 1), q_pos))
+    return outs.swapaxes(0, 1).reshape(B, qp, H, hd)[:, :S]
+
+
+# ---------------------------------------------------------------------------
+# GQA module
+# ---------------------------------------------------------------------------
+
+def _project_qkv(p, cfg, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_forward(p, cfg, x, positions, *, window=None, use_kernel=False):
+    """Full-sequence attention (train / prefill)."""
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    if use_kernel:
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        out = fa_ops.flash_attention(
+            q, k, v, causal=cfg.causal, window=window, cap=cfg.attn_softcap
+        )
+    else:
+        out = flash_attention(
+            q, k, v,
+            q_positions=positions, kv_positions=positions,
+            causal=cfg.causal, window=window, cap=cfg.attn_softcap,
+            q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+        )
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def init_kv_cache(cfg, batch, length, window, dtype):
+    size = min(length, window) if window else length
+    return {
+        "k": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.hd), dtype),
+        "pos_tag": jnp.full((size,), -1, jnp.int32),
+    }
+
+
+def gqa_decode(p, cfg, x, pos, cache, *, window=None):
+    """One-token decode. x: (B,1,d); pos: scalar int32. Updates ring cache."""
+    positions = pos[None].astype(jnp.int32)
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    size = cache["k"].shape[1]
+    slot = (pos % size).astype(jnp.int32)
+    cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1),
+        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1),
+        "pos_tag": jax.lax.dynamic_update_slice_in_dim(
+            cache["pos_tag"], positions, slot, axis=0
+        ),
+    }
+    kc, vc, tags = cache["k"], cache["v"], cache["pos_tag"]
+    B, S, KV, hd = kc.shape
+    H = cfg.n_heads
+    G = H // KV
+    qh = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qh, kc.astype(jnp.float32)) / jnp.sqrt(hd)
+    if cfg.attn_softcap:
+        s = softcap(s, cfg.attn_softcap)
+    mask = (tags >= 0) & (tags <= pos)
+    if window is not None:
+        mask &= pos - tags < window
+    s = jnp.where(mask[None, None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", w, vc.astype(jnp.float32))
+    out = out.reshape(B, 1, H, hd).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+def _mla_q(p, cfg, x, positions):
+    ql = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dq"]), p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", ql, p["w_uq"])
+    q_nope, q_rope = q[..., : cfg.hd], q[..., cfg.hd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, cfg, x, positions):
+    dkv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    c_kv = rms_norm(dkv[..., : cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = dkv[..., cfg.kv_lora_rank:][:, :, None, :]          # 1 shared head
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_forward(p, cfg, x, positions):
+    """Train/prefill: materialise per-head K/V from the latent, flash over it."""
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c_kv, k_rope = _mla_latent(p, cfg, x, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"])
+    H = cfg.n_heads
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :], k_rope.shape[:2] + (H, cfg.qk_rope_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, cfg.qk_rope_dim)))
+    out = flash_attention(
+        q, k, v_pad, q_positions=positions, kv_positions=positions, causal=True,
+        q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+    )[..., : cfg.hd]
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def init_mla_cache(cfg, batch, length, dtype):
+    return {
+        "c_kv": jnp.zeros((batch, length, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, length, cfg.qk_rope_dim), dtype),
+        "pos_tag": jnp.full((length,), -1, jnp.int32),
+    }
+
+
+def mla_decode(p, cfg, x, pos, cache):
+    """Absorbed decode: score/accumulate in the latent space (no per-head K/V)."""
+    positions = pos[None].astype(jnp.int32)
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)     # (B,1,H,hd), (B,1,H,rd)
+    c_kv_t, k_rope_t = _mla_latent(p, cfg, x, positions)
+    slot = pos.astype(jnp.int32)
+    cache = {
+        "c_kv": jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv_t, slot, 1),
+        "k_rope": jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope_t, slot, 1),
+        "pos_tag": jax.lax.dynamic_update_slice_in_dim(
+            cache["pos_tag"], positions, slot, 0
+        ),
+    }
+    c_kv, k_rope, tags = cache["c_kv"], cache["k_rope"], cache["pos_tag"]
+    # absorb: q_eff = q_nope @ w_uk  -> latent space
+    q_eff = jnp.einsum("bshk,rhk->bshr", q_nope.astype(jnp.float32),
+                       p["w_uk"].astype(jnp.float32))            # (B,1,H,r)
+    s = jnp.einsum("bshr,btr->bhst", q_eff, c_kv.astype(jnp.float32))
+    s = s + jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32),
+                       k_rope.astype(jnp.float32))
+    s = s / jnp.sqrt(cfg.hd + cfg.qk_rope_dim)
+    mask = (tags >= 0) & (tags <= pos)
+    s = jnp.where(mask[None, None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    lat = jnp.einsum("bhst,btr->bshr", w, c_kv.astype(jnp.float32))  # (B,1,H,r)
+    out = jnp.einsum("bshr,rhk->bshk", lat, p["w_uv"].astype(jnp.float32))
+    out = out.astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache

@@ -1,0 +1,83 @@
+"""Shared layer primitives (raw JAX): norms, RoPE, inits, FFNs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def rms_norm(x, gamma, eps=1e-6):
+    """RMSNorm with fp32 statistics but bf16 scaling.
+
+    Upcasting the whole tensor (x.astype(f32) * ...) makes XLA hoist the
+    convert into the remat-saved residual, doubling the activation stack
+    (measured: 18.4 GiB f32 vs 9.2 GiB bf16 per stage for gemma2-9b, §Perf).
+    """
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = (jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    return x * scale * (1.0 + gamma.astype(x.dtype))
+
+
+def softcap(x, cap):
+    return cap * jnp.tanh(x / cap)
+
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def gelu_mlp(x, w_up, w_down, b_up=None, b_down=None):
+    h = jnp.einsum("...d,df->...f", x, w_up)
+    if b_up is not None:
+        h = h + b_up
+    h = jax.nn.gelu(h)
+    out = jnp.einsum("...f,fd->...d", h, w_down)
+    if b_down is not None:
+        out = out + b_down
+    return out
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Token CE in float32; labels < 0 are ignored.
+
+    The gold logit is picked via a one-hot reduction rather than
+    take_along_axis: with vocab-sharded logits, GSPMD keeps the
+    select+reduce fused and sharded, while a gather along the sharded vocab
+    axis re-materialises the full (B, S, V) tensor per device.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    V = logits.shape[-1]
+    onehot = jax.nn.one_hot(jnp.maximum(labels, 0), V, dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = logz - gold
+    valid = (labels >= 0) if mask is None else (mask & (labels >= 0))
+    nll = jnp.where(valid, nll, 0.0)
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)

@@ -1,0 +1,107 @@
+"""Mamba (S6) selective-state-space block, as interleaved in Jamba.
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t        (per channel, state N)
+    y_t = C_t h_t + D x_t
+
+Prefill runs a sequential lax.scan with carry (B, d_inner, N) — h is never
+materialised across time (a (B,S,d_inner,N) tensor would be terabytes at
+Jamba scale); the Pallas `mamba_scan` kernel is the TPU chunked path and this
+is its oracle. Decode carries (conv window, h).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+def _dt_rank(cfg) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def init_mamba_params(key, cfg, dtype):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    R = _dt_rank(cfg)
+    ks = jax.random.split(key, 7)
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype=dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, di), dtype=dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, R + 2 * N), dtype=dtype),
+        "dt_proj": dense_init(ks[3], (R, di), dtype=dtype),
+        "dt_bias": jnp.log(jnp.expm1(0.01)) * jnp.ones((di,), jnp.float32),
+        "A_log": jnp.log(A),                    # (di, N) fp32
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d), dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b, carry=None):
+    """Depthwise causal conv. x: (B,S,di); w: (K,di); carry: (B,K-1,di)."""
+    K = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K))
+    return out + b, xp[:, -(K - 1):]
+
+
+def _ssm_inputs(p, cfg, xz):
+    """Shared pre-scan computation. Returns (x_conv, z, dt, B, C)."""
+    di = cfg.ssm_expand * cfg.d_model
+    N = cfg.ssm_state
+    R = _dt_rank(cfg)
+    x, z = xz[..., :di], xz[..., di:]
+    proj = jnp.einsum("bsd,dr->bsr", x, p["x_proj"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", proj[..., :R], p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"]
+    )                                                        # (B,S,di) fp32
+    Bmat = proj[..., R : R + N].astype(jnp.float32)          # (B,S,N)
+    Cmat = proj[..., R + N :].astype(jnp.float32)
+    return x, z, dt, Bmat, Cmat
+
+
+def mamba_forward(p, cfg, x_in, state):
+    """x_in: (B,S,d); state {"conv": (B,K-1,di), "h": (B,di,N)}."""
+    xz = jnp.einsum("bsd,de->bse", x_in, p["in_proj"])
+    di = cfg.ssm_expand * cfg.d_model
+    x, z = xz[..., :di], xz[..., di:]
+    x, conv_carry = _causal_conv(x, p["conv_w"], p["conv_b"], state["conv"])
+    x = jax.nn.silu(x)
+    _, _, dt, Bm, Cm = _ssm_inputs(p, cfg, jnp.concatenate([x, z], -1))
+
+    A = -jnp.exp(p["A_log"])                                 # (di,N)
+    io_dt = jnp.bfloat16 if getattr(cfg, "ssm_io_bf16", False) else jnp.float32
+    xf = x.astype(io_dt)
+
+    def step(h, inp):
+        # inputs may stream in bf16 (cfg.ssm_io_bf16); math stays fp32
+        x_t, dt_t, B_t, C_t = (t.astype(jnp.float32) for t in inp)
+        da = jnp.exp(dt_t[..., None] * A)                    # (B,di,N)
+        h = da * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    seq = (xf.swapaxes(0, 1), dt.astype(io_dt).swapaxes(0, 1),
+           Bm.astype(io_dt).swapaxes(0, 1), Cm.astype(io_dt).swapaxes(0, 1))
+    unroll = min(getattr(cfg, "scan_unroll", 1), x.shape[1])
+    h_new, ys = jax.lax.scan(step, state["h"], seq, unroll=unroll)
+    y = ys.swapaxes(0, 1) + xf * p["D"]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"])
+    return out, {"conv": conv_carry, "h": h_new}
+
+
+def init_mamba_state(cfg, batch, dtype):
+    di = cfg.ssm_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+        "h": jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+    }

@@ -1,0 +1,129 @@
+"""RWKV6 "Finch" blocks (arXiv:2404.05892): data-dependent decay WKV.
+
+Time-mix: per-head linear-attention state S in R^{hd x hd} updated with a
+*data-dependent* per-channel decay w_t (the RWKV6 contribution):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+Prefill uses a sequential lax.scan with O(B*H*hd^2) carry (the Pallas
+`rwkv6_scan` kernel is the TPU chunked-parallel path; this is its oracle).
+Decode is one step with carried (token-shift, S) state. Channel-mix is the
+RWKV squared-relu FFN. Simplification vs the released model: token-shift uses
+learned static lerp weights (the low-rank data-dependent *decay* is kept,
+per-token-shift LoRA omitted) — noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+def init_rwkv_params(key, cfg, dtype):
+    d = cfg.d_model
+    H = d // cfg.rwkv_head_dim
+    hd = cfg.rwkv_head_dim
+    lora = 64
+    ks = jax.random.split(key, 12)
+    return {
+        "mu": 0.5 * jnp.ones((5, d), dtype),            # shift-mix for r,k,v,g,w
+        "wr": dense_init(ks[0], (d, d), dtype=dtype),
+        "wk": dense_init(ks[1], (d, d), dtype=dtype),
+        "wv": dense_init(ks[2], (d, d), dtype=dtype),
+        "wg": dense_init(ks[3], (d, d), dtype=dtype),
+        "w_lora_a": dense_init(ks[4], (d, lora), dtype=dtype),
+        "w_lora_b": dense_init(ks[5], (lora, d), scale=0.01, dtype=dtype),
+        "w_bias": jnp.full((d,), -6.0, dtype),          # slow default decay
+        "u": dense_init(ks[6], (H, hd), dtype=dtype),   # bonus
+        "ln_g": jnp.ones((d,), dtype),                  # per-head groupnorm
+        "ln_b": jnp.zeros((d,), dtype),
+        "wo": dense_init(ks[7], (d, d), dtype=dtype),
+        # channel mix
+        "mu_c": 0.5 * jnp.ones((2, d), dtype),
+        "ck": dense_init(ks[8], (d, cfg.d_ff), dtype=dtype),
+        "cv": dense_init(ks[9], (cfg.d_ff, d), dtype=dtype),
+        "cr": dense_init(ks[10], (d, d), dtype=dtype),
+    }
+
+
+def _shift(x, x_prev):
+    """Token shift: previous token's features ((B,S,d), carry (B,d))."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def _decay(p, xw):
+    """Data-dependent per-channel decay in (0,1): exp(-exp(.))."""
+    loraw = jnp.einsum("...d,dl->...l", xw, p["w_lora_a"])
+    loraw = jnp.einsum("...l,ld->...d", jnp.tanh(loraw), p["w_lora_b"])
+    return jnp.exp(-jnp.exp((p["w_bias"] + loraw).astype(jnp.float32)))
+
+
+def _group_norm(y, g, b, H, eps=1e-5):
+    B, S, d = y.shape
+    yh = y.reshape(B, S, H, d // H).astype(jnp.float32)
+    mean = jnp.mean(yh, -1, keepdims=True)
+    var = jnp.var(yh, -1, keepdims=True)
+    yh = (yh - mean) * jax.lax.rsqrt(var + eps)
+    return (yh.reshape(B, S, d) * g + b).astype(y.dtype)
+
+
+def time_mix(p, cfg, x, state):
+    """x: (B,S,d); state: {"shift": (B,d), "wkv": (B,H,hd,hd)} -> (y, state)."""
+    B, S, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    xs = _shift(x, state["shift"])
+    mu = p["mu"]
+    r = jnp.einsum("bsd,de->bse", _mix(x, xs, mu[0]), p["wr"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,de->bse", _mix(x, xs, mu[1]), p["wk"]).reshape(B, S, H, hd)
+    v = jnp.einsum("bsd,de->bse", _mix(x, xs, mu[2]), p["wv"]).reshape(B, S, H, hd)
+    g = jnp.einsum("bsd,de->bse", _mix(x, xs, mu[3]), p["wg"])
+    w = _decay(p, _mix(x, xs, mu[4])).reshape(B, S, H, hd)      # fp32 (B,S,H,hd)
+
+    u = p["u"].astype(jnp.float32)
+
+    def step(S_state, inp):
+        r_t, k_t, v_t, w_t = inp                                 # (B,H,hd) each
+        kv = k_t[..., :, None] * v_t[..., None, :]               # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S_state + u[..., :, None] * kv)
+        S_new = w_t[..., :, None] * S_state + kv
+        return S_new, y
+
+    rs, ks_, vs, ws = (t.swapaxes(0, 1).astype(jnp.float32) for t in (r, k, v, w))
+    unroll = min(getattr(cfg, "scan_unroll", 1), S)
+    S_new, ys = jax.lax.scan(
+        step, state["wkv"].astype(jnp.float32), (rs, ks_, vs, ws), unroll=unroll
+    )
+    y = ys.swapaxes(0, 1).reshape(B, S, d)
+    y = _group_norm(y, p["ln_g"].astype(jnp.float32), p["ln_b"].astype(jnp.float32), H)
+    y = y.astype(x.dtype) * jax.nn.silu(g)
+    out = jnp.einsum("bsd,de->bse", y, p["wo"])
+    return out, {"shift": x[:, -1], "wkv": S_new.astype(state["wkv"].dtype)}
+
+
+def channel_mix(p, cfg, x, state):
+    """RWKV FFN. state: {"shift_c": (B,d)}."""
+    xs = _shift(x, state["shift_c"])
+    mu = p["mu_c"]
+    k = jnp.einsum("bsd,df->bsf", _mix(x, xs, mu[0]), p["ck"])
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["cv"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", _mix(x, xs, mu[1]), p["cr"]))
+    return r * kv, {"shift_c": x[:, -1]}
+
+
+def init_rwkv_state(cfg, batch, dtype):
+    d = cfg.d_model
+    H = d // cfg.rwkv_head_dim
+    hd = cfg.rwkv_head_dim
+    return {
+        "shift": jnp.zeros((batch, d), dtype),
+        "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "shift_c": jnp.zeros((batch, d), dtype),
+    }

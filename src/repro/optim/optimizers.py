@@ -1,0 +1,95 @@
+"""Raw-JAX optimizers (no optax in this container): SGD, AdamW, schedules.
+
+API mirrors the (init, update) convention: `state = init(params)` and
+`params, state = update(grads, state, params)`. All pytree-polymorphic.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: object | None = None
+    nu: object | None = None
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: x * scale, tree), norm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def sgd(lr: float | Callable, momentum: float = 0.0):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        mu = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return OptState(step=jnp.zeros((), jnp.int32), mu=mu)
+
+    def update(grads, state, params):
+        step = state.step + 1
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state.mu, grads)
+            delta = mu
+        else:
+            mu, delta = None, grads
+        lr_t = lr_fn(step)
+        new = jax.tree.map(lambda p, d: p - lr_t * d.astype(p.dtype), params, delta)
+        return new, OptState(step=step, mu=mu)
+
+    return init, update
+
+
+def adamw(
+    lr: float | Callable,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda: jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+        return OptState(step=jnp.zeros((), jnp.int32), mu=zeros(), nu=zeros())
+
+    def update(grads, state, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.nu, grads
+        )
+        lr_t = lr_fn(step)
+
+        def upd(p, m, v):
+            mh = m / (1 - b1**t)
+            vh = v / (1 - b2**t)
+            d = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * d).astype(p.dtype)
+
+        new = jax.tree.map(upd, params, mu, nu)
+        return new, OptState(step=step, mu=mu, nu=nu)
+
+    return init, update

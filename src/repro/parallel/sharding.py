@@ -1,0 +1,206 @@
+"""Sharding rules: parameter PartitionSpecs + activation constraints.
+
+Mesh axes: ('data', 'model') single pod; ('pod', 'data', 'model') multi-pod.
+Batch shards on ('pod','data') (together: DP); weights on 'model' (TP/EP):
+
+  attention q/k/v on heads, o on heads (GSPMD pads non-divisible head counts,
+  e.g. arctic's 56) · FFN on d_ff · experts on the expert axis (exact:
+  128/256/16 % 16 == 0, matching the shard_map specs in repro.models.moe) ·
+  embeddings on d_model, LM head on vocab · norms/scalars replicated.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def batch_spec(mesh) -> P:
+    return P(data_axes(mesh))
+
+
+_RULES = {
+    # --- embeddings / head ---
+    # embed is sharded on VOCAB: with tied embeddings a d-sharded embed makes
+    # the head contract over the sharded dim, and GSPMD materialises fully
+    # replicated f32 (B,S,V) logits (62.5 GiB/device for gemma2) before any
+    # output constraint can shard them (§Perf gemma iteration 3)
+    "embed": lambda nd: P("model", None),
+    "head": lambda nd: P(None, "model"),
+    "frontend_proj": lambda nd: P(None, "model"),
+    # --- attention (3D) / rwkv projections (2D) share names ---
+    "wq": lambda nd: P(None, "model", None) if nd == 3 else P(None, "model"),
+    "wk": lambda nd: P(None, "model", None) if nd == 3 else P(None, "model"),
+    "wv": lambda nd: P(None, "model", None) if nd == 3 else P(None, "model"),
+    "wo": lambda nd: P("model", None, None) if nd == 3 else P("model", None),
+    "bq": lambda nd: P("model", None),
+    "bk": lambda nd: P("model", None),
+    "bv": lambda nd: P("model", None),
+    # --- MLA ---
+    "w_dq": lambda nd: P(None, "model"),
+    "w_uq": lambda nd: P(None, "model", None),
+    "w_dkv": lambda nd: P(),
+    "w_uk": lambda nd: P(None, "model", None),
+    "w_uv": lambda nd: P(None, "model", None),
+    # --- dense FFN ---
+    "w_gate": lambda nd: P(None, "model") if nd == 2 else P("model", None, None),
+    "w_up": lambda nd: P(None, "model") if nd == 2 else P("model", None, None),
+    "w_down": lambda nd: P("model", None) if nd == 2 else P("model", None, None),
+    "b_up": lambda nd: P("model"),
+    "b_down": lambda nd: P(),
+    # --- MoE (3D expert tensors hit the nd==3 branches above) ---
+    "router": lambda nd: P(),
+    # --- mamba ---
+    "in_proj": lambda nd: P(None, "model"),
+    "conv_w": lambda nd: P(None, "model"),
+    "conv_b": lambda nd: P("model"),
+    "x_proj": lambda nd: P("model", None),
+    "dt_proj": lambda nd: P(None, "model"),
+    "dt_bias": lambda nd: P("model"),
+    "A_log": lambda nd: P("model", None),
+    "D": lambda nd: P("model"),
+    "out_proj": lambda nd: P("model", None),
+    # --- rwkv ---
+    "wr": lambda nd: P(None, "model"),
+    "wk_r": lambda nd: P(None, "model"),
+    "wg": lambda nd: P(None, "model"),
+    "w_lora_a": lambda nd: P(),
+    "w_lora_b": lambda nd: P(None, "model"),
+    "w_bias": lambda nd: P("model"),
+    "u": lambda nd: P("model", None),
+    "ln_g": lambda nd: P("model"),
+    "ln_b": lambda nd: P("model"),
+    "ck": lambda nd: P(None, "model"),
+    "cv": lambda nd: P("model", None),
+    "cr": lambda nd: P(None, "model"),
+    "mu": lambda nd: P(),
+    "mu_c": lambda nd: P(),
+}
+
+# rwkv wk/wv collide with attention names on purpose (same (d,d)->(None,model))
+
+
+def _spec_for_leaf(path, leaf) -> P:
+    names = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+    name = names[-1] if names else ""
+    nd = getattr(leaf, "ndim", 0)
+    in_stage = "stages" in names
+    rule = _RULES.get(name)
+    if rule is None:
+        spec = P()                       # norms, scalars -> replicated
+    else:
+        spec = rule(nd - (1 if in_stage else 0))
+    if in_stage:                          # stacked period dim
+        spec = P(*((None,) + tuple(spec)))
+    return spec
+
+
+def param_specs(params):
+    """PartitionSpec pytree matching `params` (works on ShapeDtypeStructs)."""
+    return jax.tree_util.tree_map_with_path(_spec_for_leaf, params)
+
+
+def param_shardings(mesh, params):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), param_specs(params))
+
+
+def sanitize_specs(mesh, specs, tree):
+    """Drop (to replicated) any spec axis whose dim doesn't divide the mesh
+    axes — jit in_shardings requires exact divisibility (e.g. hubert's
+    504-class head can't shard 16 ways)."""
+
+    def leaf(spec, arr):
+        dims = list(spec)
+        changed = False
+        for i, ax in enumerate(dims):
+            if ax is None or i >= arr.ndim:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if arr.shape[i] % size != 0:
+                dims[i] = None
+                changed = True
+        return P(*dims) if changed else spec
+
+    return jax.tree.map(leaf, specs, tree)
+
+
+def opt_state_specs(opt_state, params):
+    """AdamW mu/nu mirror the param specs; step is replicated."""
+    from repro.optim.optimizers import OptState
+
+    pspecs = param_specs(params)
+    return OptState(
+        step=P(),
+        mu=None if opt_state.mu is None else pspecs,
+        nu=None if opt_state.nu is None else pspecs,
+    )
+
+
+def batch_specs(mesh, batch):
+    """Shard the leading (batch) dim of every batch leaf on ('pod','data');
+    leaves whose batch dim is not divisible by the DP size (e.g. long_500k's
+    batch of 1) are replicated instead."""
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+
+    def leaf(x):
+        nd = getattr(x, "ndim", 0)
+        if nd == 0 or x.shape[0] % dp_size != 0:
+            return P()
+        return P(*((dp,) + (None,) * (nd - 1)))
+
+    return jax.tree.map(leaf, batch)
+
+
+def constrain(x, mesh, spec: P):
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# KV-cache / recurrent-state sharding (leaves carry a leading period-stack dim)
+# ---------------------------------------------------------------------------
+
+_CACHE_RULES = {
+    "k": ("B", None, "model", None),
+    "v": ("B", None, "model", None),
+    "pos_tag": (None,),
+    "c_kv": ("B", None, "model"),
+    "k_rope": ("B", None, None),
+    "conv": ("B", None, "model"),
+    "h": ("B", "model", None),
+    "shift": ("B", "model"),
+    "shift_c": ("B", "model"),
+    "wkv": ("B", "model", None, None),
+}
+
+
+def cache_specs(mesh, cache):
+    """PartitionSpecs for a decode cache pytree (from models.model.init_cache)."""
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+
+    def leaf(path, x):
+        names = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+        name = names[-1] if names else ""
+        rule = _CACHE_RULES.get(name)
+        if rule is None:
+            return P()
+        spec = []
+        for axis, dim in zip(rule, x.shape[1:]):
+            if axis == "B":
+                spec.append(dp if dim % dp_size == 0 and dp else None)
+            else:
+                spec.append(axis)
+        return P(*([None] + spec))  # leading period-stack dim replicated
+
+    return jax.tree_util.tree_map_with_path(leaf, cache)

@@ -1,0 +1,132 @@
+"""The paper's SemCom model (§III-A, §V-E): a CNN autoencoder in raw JAX.
+
+Architecture (paper §V-E): encoder = conv5x5 -> [tanh, conv] -> maxpool2x2 ->
+[tanh, conv] -> tanh; decoder mirrors it (upsample + conv). AWGN is injected
+between encoder and decoder during training (the "channel") so the codec is
+robust to the physical link. The compression rate rho controls the bottleneck:
+latent channels = ceil(rho * base_latent); for rho <= 0.5 an extra 2x2
+pooling stage halves the spatial dims as in the paper.
+
+Loss = MSE of reconstruction (the paper's FL objective). PSNR and a
+[0,1]-bounded proxy accuracy are exposed so the A(rho) curve can be re-fit
+from our own FL-trained models (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AEConfig(NamedTuple):
+    image_size: int = 32
+    channels: int = 3
+    hidden: int = 16
+    base_latent: int = 8          # latent channels at rho = 1
+    rho: float = 1.0
+    noise_std: float = 0.1        # AWGN channel sigma
+
+    @property
+    def latent_channels(self) -> int:
+        return max(1, math.ceil(self.rho * self.base_latent))
+
+    @property
+    def extra_pool(self) -> bool:
+        return self.rho <= 0.5    # paper: one more maxpool for rho <= 0.5
+
+    @property
+    def compressed_bits(self) -> float:
+        """Size of the transmitted latent (float32 bits) — the C_{n,l} proxy."""
+        s = self.image_size // (4 if self.extra_pool else 2)
+        return float(s * s * self.latent_channels * 32)
+
+
+def _conv_init(key, k, cin, cout):
+    scale = 1.0 / math.sqrt(k * k * cin)
+    w = jax.random.uniform(key, (k, k, cin, cout), minval=-scale, maxval=scale)
+    return {"w": w, "b": jnp.zeros((cout,))}
+
+
+def init_params(key: jax.Array, cfg: AEConfig):
+    ks = jax.random.split(key, 6)
+    lat = cfg.latent_channels
+    return {
+        "enc1": _conv_init(ks[0], 5, cfg.channels, cfg.hidden),
+        "enc2": _conv_init(ks[1], 3, cfg.hidden, cfg.hidden),
+        "enc3": _conv_init(ks[2], 3, cfg.hidden, lat),
+        "dec1": _conv_init(ks[3], 3, lat, cfg.hidden),
+        "dec2": _conv_init(ks[4], 3, cfg.hidden, cfg.hidden),
+        "dec3": _conv_init(ks[5], 5, cfg.hidden, cfg.channels),
+    }
+
+
+def _conv(x, p, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p["b"]
+
+
+def _pool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def _upsample(x):
+    b, h, w, c = x.shape
+    return jax.image.resize(x, (b, 2 * h, 2 * w, c), "nearest")
+
+
+def encode(params, cfg: AEConfig, x):
+    h = jnp.tanh(_conv(x, params["enc1"]))
+    h = _pool(jnp.tanh(_conv(h, params["enc2"])))
+    if cfg.extra_pool:
+        h = _pool(h)
+    return jnp.tanh(_conv(h, params["enc3"]))
+
+
+def decode(params, cfg: AEConfig, z):
+    h = jnp.tanh(_conv(z, params["dec1"]))
+    if cfg.extra_pool:
+        h = _upsample(h)
+    h = _upsample(jnp.tanh(_conv(h, params["dec2"])))
+    return jnp.tanh(_conv(h, params["dec3"]))
+
+
+def forward(params, cfg: AEConfig, x, key=None):
+    """Full codec pass; AWGN channel applied when a key is given (training)."""
+    z = encode(params, cfg, x)
+    if key is not None:
+        z = z + cfg.noise_std * jax.random.normal(key, z.shape)
+    return decode(params, cfg, z)
+
+
+def mse_loss(params, cfg: AEConfig, x, key=None):
+    return jnp.mean(jnp.square(forward(params, cfg, x, key) - x))
+
+
+def psnr(params, cfg: AEConfig, x, key=None, peak: float = 2.0):
+    m = mse_loss(params, cfg, x, key)
+    return 10.0 * jnp.log10(peak**2 / jnp.maximum(m, 1e-12))
+
+
+def proxy_accuracy(params, cfg: AEConfig, x, key=None,
+                   lo: float = 8.0, hi: float = 28.0):
+    """Map PSNR to a [0,1] 'detection-accuracy' proxy (monotone, saturating).
+
+    Used only to re-fit A(rho); the paper's own YOLO-based fit is the default
+    accuracy model for the allocator (DESIGN.md §8).
+    """
+    p = psnr(params, cfg, x, key)
+    return jnp.clip((p - lo) / (hi - lo), 0.0, 1.0)
+
+
+def param_bits(params) -> float:
+    """Upload size D_n in bits (float32) — feeds the allocator."""
+    return float(
+        sum(x.size for x in jax.tree_util.tree_leaves(params)) * 32
+    )

@@ -1,0 +1,12 @@
+"""Test-session configuration.
+
+4 host devices so the sharding/pjit tests can build miniature meshes.
+(Deliberately NOT 512 — that flag belongs exclusively to launch/dryrun.py per
+the build brief; smoke tests and benchmarks should see a realistic host.)
+Must run before the first jax import in the test process.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=4 " + os.environ.get("XLA_FLAGS", "")
+)

@@ -1,0 +1,105 @@
+"""Hypothesis property tests on FedSem system-model invariants (fast, pure)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Weights, sample_params
+from repro.core.allocator import harden_x
+from repro.core.p3 import solve_T, solve_rho
+from repro.core.accuracy import default_accuracy
+from repro.core.system import (
+    device_power, device_rate, fl_tx_time, semcom_energy, subcarrier_rate,
+)
+
+settings = hypothesis.settings(max_examples=20, deadline=None)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+@settings
+@hypothesis.given(seed=seeds)
+def test_rate_scale_invariance_in_gain_power_product(seed):
+    """r(p, g) depends on g only through p*g (SNR): r(2p, g) == r(p, 2g)."""
+    params = sample_params(jax.random.PRNGKey(seed % 101), N=3, K=6)
+    P = jnp.full((3, 6), 0.01)
+    import dataclasses
+
+    params2 = dataclasses.replace(params, g=params.g * 2.0)
+    np.testing.assert_allclose(
+        np.asarray(subcarrier_rate(params, 2 * P)),
+        np.asarray(subcarrier_rate(params2, P)),
+        rtol=1e-5,
+    )
+
+
+@settings
+@hypothesis.given(seed=seeds)
+def test_semcom_energy_linear_in_rho(seed):
+    params = sample_params(jax.random.PRNGKey(seed % 103), N=3, K=6)
+    X = jnp.zeros((3, 6)).at[jnp.arange(6) % 3, jnp.arange(6)].set(1.0)
+    P = X * 0.01
+    r = device_rate(params, P, X)
+    p_n = device_power(P)
+    e1 = semcom_energy(params, 0.3, p_n, r)
+    e2 = semcom_energy(params, 0.6, p_n, r)
+    np.testing.assert_allclose(np.asarray(e2), 2 * np.asarray(e1), rtol=1e-5)
+
+
+@settings
+@hypothesis.given(seed=seeds, k2a=st.floats(0.2, 1.0), k2b=st.floats(2.0, 10.0))
+def test_T_monotone_decreasing_in_kappa2(seed, k2a, k2b):
+    """Higher time weight => the chosen FL deadline T can only shrink."""
+    params = sample_params(jax.random.PRNGKey(seed % 107), N=4, K=8)
+    X = jnp.zeros((4, 8)).at[jnp.arange(8) % 4, jnp.arange(8)].set(1.0)
+    tau = fl_tx_time(params, device_rate(params, X * 0.01, X))
+    Ta = solve_T(params, Weights(jnp.float32(1.0), jnp.float32(k2a), jnp.float32(1.0)), tau)
+    Tb = solve_T(params, Weights(jnp.float32(1.0), jnp.float32(k2b), jnp.float32(1.0)), tau)
+    assert float(Tb) <= float(Ta) * (1 + 1e-4)
+
+
+@settings
+@hypothesis.given(seed=seeds, k3a=st.floats(0.01, 0.5), k3b=st.floats(2.0, 20.0))
+def test_rho_monotone_in_kappa3(seed, k3a, k3b):
+    """Theorem-1 rho* is non-decreasing in the accuracy weight kappa3."""
+    params = sample_params(jax.random.PRNGKey(seed % 109), N=4, K=8)
+    X = jnp.zeros((4, 8)).at[jnp.arange(8) % 4, jnp.arange(8)].set(1.0)
+    P = X * 0.01
+    r = device_rate(params, P, X)
+    p_n = device_power(P)
+    acc = default_accuracy()
+    ra = solve_rho(params, Weights(jnp.float32(1.0), jnp.float32(1.0), jnp.float32(k3a)), r, p_n, acc)
+    rb = solve_rho(params, Weights(jnp.float32(1.0), jnp.float32(1.0), jnp.float32(k3b)), r, p_n, acc)
+    assert float(rb) >= float(ra) - 1e-5
+
+
+@settings
+@hypothesis.given(seed=seeds)
+def test_harden_x_valid_assignment(seed):
+    """Hardening any soft X yields: binary, <=1 device per subcarrier,
+    >=1 subcarrier per device, and is idempotent."""
+    N, K = 4, 10
+    X = jax.random.uniform(jax.random.PRNGKey(seed % 113), (N, K))
+    Xb = harden_x(X, N, K)
+    arr = np.asarray(Xb)
+    assert set(np.unique(arr)).issubset({0.0, 1.0})
+    assert (arr.sum(0) <= 1).all()
+    assert (arr.sum(1) >= 1).all()
+    np.testing.assert_array_equal(np.asarray(harden_x(Xb, N, K)), arr)
+
+
+@settings
+@hypothesis.given(seed=seeds)
+def test_topk_update_compression_bounds(seed):
+    """rho-compression keeps <= ~rho fraction of entries and preserves the
+    largest-magnitude ones (paper's rho = transmitted/original semantics)."""
+    from repro.fl.federated import topk_sparsify
+
+    u = {"w": jax.random.normal(jax.random.PRNGKey(seed % 127), (400,))}
+    rho = 0.25
+    sp = topk_sparsify(u, rho)
+    nz = int(jnp.sum(sp["w"] != 0))
+    assert nz <= int(400 * rho * 1.2) + 1
+    kept_min = float(jnp.min(jnp.abs(sp["w"][sp["w"] != 0]))) if nz else 0.0
+    dropped_max = float(jnp.max(jnp.abs(jnp.where(sp["w"] == 0, u["w"], 0.0))))
+    assert kept_min >= dropped_max - 1e-6

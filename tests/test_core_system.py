@@ -1,0 +1,146 @@
+"""Unit + property tests for the FedSem system model and Theorem-1 solver."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Weights, default_accuracy, sample_params
+from repro.core.accuracy import AccuracyFn, fit_power_law
+from repro.core.p3 import solve_T, solve_p3
+from repro.core.system import (
+    comp_energy,
+    comp_time,
+    device_power,
+    device_rate,
+    fl_tx_time,
+    objective,
+    subcarrier_rate,
+)
+from repro.core.types import Allocation
+
+settings = hypothesis.settings(max_examples=25, deadline=None)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return sample_params(jax.random.PRNGKey(0))
+
+
+@settings
+@hypothesis.given(seed=seeds)
+def test_rate_monotone_in_power(seed):
+    params = sample_params(jax.random.PRNGKey(seed % 97), N=4, K=8)
+    P1 = jnp.full((4, 8), 0.01)
+    P2 = P1 * 2.0
+    r1, r2 = subcarrier_rate(params, P1), subcarrier_rate(params, P2)
+    assert bool(jnp.all(r2 >= r1))
+    # concavity in power: midpoint rate >= chord
+    rm = subcarrier_rate(params, 0.5 * (P1 + P2))
+    assert bool(jnp.all(rm >= 0.5 * (r1 + r2) - 1e-3))
+
+
+def test_units_sanity(params):
+    """Paper-default scales: rates ~Mbps, tau ~ms, E_c ~0.01-0.2 J."""
+    X = jnp.zeros((params.N, params.K)).at[jnp.arange(params.K) % params.N,
+                                           jnp.arange(params.K)].set(1.0)
+    P = X * 0.02
+    r = device_rate(params, P, X)
+    assert float(jnp.median(r)) > 1e6 and float(jnp.max(r)) < 1e9
+    tau = fl_tx_time(params, r)
+    assert float(jnp.max(tau)) < 1.0
+    f = jnp.full((params.N,), 1e9)
+    assert 1e-4 < float(jnp.sum(comp_energy(params, f))) < 1.0
+    assert 0.01 < float(jnp.max(comp_time(params, f))) < 10.0
+
+
+def test_accuracy_assumption1():
+    """A(rho) increasing + concave (Assumption 1) for the default fit."""
+    acc = default_accuracy()
+    rho = jnp.linspace(0.01, 1.0, 101)
+    v = acc.value(rho)
+    assert bool(jnp.all(jnp.diff(v) > 0)), "increasing"
+    assert bool(jnp.all(jnp.diff(jnp.diff(v)) < 1e-6)), "concave"
+    np.testing.assert_allclose(float(acc.value(1.0)), 0.6356, rtol=1e-5)
+
+
+def test_fit_power_law_roundtrip():
+    acc = AccuracyFn(jnp.float32(0.7), jnp.float32(0.3))
+    rho = jnp.linspace(0.05, 1.0, 20)
+    fit = fit_power_law(rho, acc.value(rho))
+    np.testing.assert_allclose(float(fit.a), 0.7, rtol=1e-3)
+    np.testing.assert_allclose(float(fit.b), 0.3, rtol=1e-3)
+
+
+@settings
+@hypothesis.given(seed=seeds)
+def test_theorem1_feasibility_and_kkt(seed):
+    params = sample_params(jax.random.PRNGKey(seed % 89), N=5, K=10)
+    w = Weights.ones()
+    X = jnp.zeros((5, 10)).at[jnp.arange(10) % 5, jnp.arange(10)].set(1.0)
+    P = X * 0.01
+    sol = solve_p3(params, w, P, X)
+    # primal feasibility
+    assert bool(jnp.all(sol.f <= params.f_max * (1 + 1e-5)))
+    assert 0.0 < float(sol.rho) <= 1.0
+    r = device_rate(params, P, X)
+    tau = fl_tx_time(params, r)
+    # eq (30): T* = max(tau + t_c) exactly
+    np.testing.assert_allclose(
+        float(sol.T), float(jnp.max(tau + comp_time(params, sol.f))), rtol=1e-5
+    )
+    # SemCom deadline after the rho clip (13f)
+    t_sc = sol.rho * params.C / jnp.maximum(r, 1e-9)
+    assert bool(jnp.all(t_sc <= params.t_sc_max * (1 + 1e-4)))
+
+
+def test_theorem1_rho_closed_form(params):
+    """Bisection rho matches the analytic root of eq. (20) for power-law A."""
+    w = Weights(jnp.float32(1.0), jnp.float32(1.0), jnp.float32(5.0))
+    acc = default_accuracy()
+    X = jnp.zeros((params.N, params.K)).at[jnp.arange(params.K) % params.N,
+                                           jnp.arange(params.K)].set(1.0)
+    P = X * params.p_max[:, None] / 5.0
+    sol = solve_p3(params, w, P, X, acc)
+    r = device_rate(params, P, X)
+    cost = float(jnp.sum(w.kappa1 * device_power(P) * params.C / r))
+    a, b = float(acc.a), float(acc.b)
+    rho_analytic = (w.kappa3 * params.N * a * b / cost) ** (1.0 / (1.0 - b))
+    rho_max = float(jnp.minimum(1.0, jnp.min(params.t_sc_max * r / params.C)))
+    expected = min(min(float(rho_analytic), rho_max), 1.0)
+    np.testing.assert_allclose(float(sol.rho), expected, rtol=1e-3)
+
+
+def test_solve_T_stationarity(params):
+    """Interior T satisfies eq. (28): sum 2 k1 xi f^3 = k2."""
+    w = Weights.ones()
+    X = jnp.zeros((params.N, params.K)).at[jnp.arange(params.K) % params.N,
+                                           jnp.arange(params.K)].set(1.0)
+    P = X * 0.02
+    tau = fl_tx_time(params, device_rate(params, P, X))
+    T = solve_T(params, w, tau)
+    eta_cd = params.eta * params.c * params.d
+    f = jnp.minimum(eta_cd / (T - tau), params.f_max)
+    lhs = float(jnp.sum(2.0 * w.kappa1 * params.xi * f**3))
+    t_lo = float(jnp.max(tau + eta_cd / params.f_max))
+    if float(T) > t_lo * (1 + 1e-6):  # interior solution
+        np.testing.assert_allclose(lhs, 1.0, rtol=1e-3)
+
+
+def test_objective_weight_scaling(params):
+    """kappa scaling acts linearly on the respective objective terms."""
+    X = jnp.zeros((params.N, params.K)).at[jnp.arange(params.K) % params.N,
+                                           jnp.arange(params.K)].set(1.0)
+    alloc = Allocation(
+        f=jnp.full((params.N,), 1e9), P=X * 0.01, X=X, rho=jnp.float32(0.5)
+    )
+    w1 = Weights.ones()
+    w2 = Weights(jnp.float32(2.0), jnp.float32(1.0), jnp.float32(1.0))
+    o1 = float(objective(params, w1, alloc))
+    o2 = float(objective(params, w2, alloc))
+    from repro.core.system import energy_breakdown
+
+    e = float(sum(jnp.sum(x) for x in energy_breakdown(params, alloc)))
+    np.testing.assert_allclose(o2 - o1, e, rtol=1e-4)

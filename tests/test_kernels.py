@@ -1,0 +1,165 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU), with
+shape/dtype sweeps per kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_default_matmul_precision", "highest")
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+def _qkv(key, B, S, H, KV, hd, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd", [
+    (1, 128, 4, 4, 64),      # MHA
+    (2, 256, 4, 2, 64),      # GQA
+    (1, 256, 8, 1, 32),      # MQA, small head
+    (1, 192, 2, 2, 128),     # S not a block multiple (padding path)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal(B, S, H, KV, hd, dtype):
+    from repro.kernels.flash_attention import ops, ref
+
+    q, k, v = _qkv(jax.random.PRNGKey(0), B, S, H, KV, hd, dtype)
+    got = ops.flash_attention(q, k, v, causal=True, use_pallas=True,
+                              interpret=True, bq=64, bk=64)
+    want = ref.naive_attention(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("window,cap,causal", [
+    (64, None, True),        # sliding window
+    (None, 50.0, True),      # gemma softcap
+    (None, None, False),     # encoder (bidirectional)
+])
+def test_flash_attention_variants(window, cap, causal):
+    from repro.kernels.flash_attention import ops, ref
+
+    q, k, v = _qkv(jax.random.PRNGKey(1), 2, 256, 4, 2, 64, jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window, cap=cap,
+                              use_pallas=True, interpret=True, bq=64, bk=64)
+    want = ref.naive_attention(q, k, v, causal=causal, window=window, cap=cap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_jnp_flash_matches_naive():
+    """The model's chunked-jnp path is itself validated against the oracle."""
+    from repro.kernels.flash_attention import ref
+    from repro.models.attention import flash_attention as jnp_flash
+
+    q, k, v = _qkv(jax.random.PRNGKey(2), 2, 200, 4, 2, 64, jnp.float32)
+    pos = jnp.arange(200, dtype=jnp.int32)
+    got = jnp_flash(q, k, v, q_positions=pos, kv_positions=pos,
+                    causal=True, window=64, q_chunk=64, kv_chunk=64)
+    want = ref.naive_attention(q, k, v, causal=True, window=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,S,hd", [(1, 2, 128, 64), (2, 4, 96, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_scan(B, H, S, hd, dtype):
+    from repro.kernels.rwkv6_scan import ops, ref
+
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    r = jax.random.normal(ks[0], (B, H, S, hd), dtype)
+    k = jax.random.normal(ks[1], (B, H, S, hd), dtype)
+    v = jax.random.normal(ks[2], (B, H, S, hd), dtype)
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, H, S, hd))).astype(jnp.float32) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (H, hd), dtype)
+    got = ops.rwkv6_scan(r, k, v, w.astype(dtype), u, use_pallas=True,
+                         interpret=True, ct=32)
+    want = ref.rwkv6_scan_ref(r, k, v, w.astype(dtype), u)[0]
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_rwkv6_model_uses_equivalent_recurrence():
+    """The model's time_mix scan equals the kernel oracle on matched inputs."""
+    from repro.kernels.rwkv6_scan import ref
+
+    B, H, S, hd = 1, 2, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    r, k, v = (jax.random.normal(ks[i], (B, H, S, hd)) for i in range(3))
+    w = jnp.full((B, H, S, hd), 0.9)
+    u = jax.random.normal(ks[4], (H, hd))
+    y, _ = ref.rwkv6_scan_ref(r, k, v, w, u)
+    # manual recurrence
+    S_state = np.zeros((B, H, hd, hd), np.float32)
+    outs = np.zeros((B, H, S, hd), np.float32)
+    rn, kn, vn, wn, un = map(np.asarray, (r, k, v, w, u))
+    for t in range(S):
+        kv = kn[:, :, t, :, None] * vn[:, :, t, None, :]
+        outs[:, :, t] = np.einsum(
+            "bhk,bhkv->bhv", rn[:, :, t], S_state + un[None, :, :, None] * kv
+        )
+        S_state = wn[:, :, t, :, None] * S_state + kv
+    np.testing.assert_allclose(np.asarray(y), outs, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# mamba scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,di,N", [(1, 64, 128, 8), (2, 96, 64, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mamba_scan(B, S, di, N, dtype):
+    from repro.kernels.mamba_scan import ops, ref
+
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    x = jax.random.normal(ks[0], (B, S, di), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, di))).astype(jnp.float32) * 0.1
+    Bm = jax.random.normal(ks[2], (B, S, N), jnp.float32)
+    Cm = jax.random.normal(ks[3], (B, S, N), jnp.float32)
+    A = -jnp.abs(jax.random.normal(jax.random.PRNGKey(6), (di, N)))
+    D = jnp.ones((di,), jnp.float32)
+    got = ops.mamba_scan(x, dt.astype(dtype), Bm, Cm, A, D, use_pallas=True,
+                         interpret=True, ct=32, bd=32)
+    want = ref.mamba_scan_ref(x, dt.astype(dtype), Bm, Cm, A, D)[0]
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+# ---------------------------------------------------------------------------
+# fedsem objective grid
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("G,N", [(512, 4), (1024, 10), (700, 6)])
+def test_fedsem_objective_grid(G, N):
+    from repro.core import Weights, sample_params
+    from repro.kernels.fedsem_objective import ops, ref
+
+    params = sample_params(jax.random.PRNGKey(7), N=N, K=2 * N)
+    ks = jax.random.split(jax.random.PRNGKey(8), 4)
+    f = jax.random.uniform(ks[0], (G, N), minval=1e8, maxval=2e9)
+    p = jax.random.uniform(ks[1], (G, N), minval=1e-3, maxval=0.1)
+    r = jax.random.uniform(ks[2], (G, N), minval=1e5, maxval=3e7)
+    rho = jax.random.uniform(ks[3], (G,), minval=0.05, maxval=1.0)
+    args = (f, p, r, rho, params.c, params.d, params.D, params.C,
+            params.t_sc_max, params.f_max, float(params.xi), float(params.eta),
+            1.0, 1.0, 1.0)
+    got = ops.objective_grid(*args, use_pallas=True, interpret=True)
+    want = ref.objective_grid(*args)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), atol=1e-3, rtol=1e-4
+    )

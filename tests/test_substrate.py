@@ -1,0 +1,207 @@
+"""Substrate tests: autoencoder, data pipeline, optimizers, checkpointing, FL."""
+import os
+import tempfile
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.io import restore, save
+from repro.data.synthetic import (
+    image_batch, make_bigram_table, partition_clients, token_batch,
+)
+from repro.optim.optimizers import (
+    adamw, clip_by_global_norm, cosine_schedule, global_norm, sgd,
+)
+from repro.semcom.autoencoder import (
+    AEConfig, forward, init_params, mse_loss, param_bits, proxy_accuracy, psnr,
+)
+
+
+# ---------------------------------------------------------------------------
+# autoencoder
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rho", [0.15, 0.4, 0.75, 1.0])
+def test_autoencoder_shapes_and_bits(rho):
+    cfg = AEConfig(rho=rho)
+    p = init_params(jax.random.PRNGKey(0), cfg)
+    x = image_batch(jax.random.PRNGKey(1), 4)
+    y = forward(p, cfg, x, jax.random.PRNGKey(2))
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+    # compressed payload grows with rho
+    if rho < 1.0:
+        assert cfg.compressed_bits <= AEConfig(rho=1.0).compressed_bits
+
+
+def test_autoencoder_trains():
+    cfg = AEConfig(rho=1.0, hidden=8, base_latent=4)
+    p = init_params(jax.random.PRNGKey(0), cfg)
+    x = image_batch(jax.random.PRNGKey(1), 16)
+    init, update = adamw(3e-3)
+    state = init(p)
+
+    @jax.jit
+    def step(p, s, k):
+        loss, g = jax.value_and_grad(lambda q: mse_loss(q, cfg, x, k))(p)
+        p, s = update(g, s, p)
+        return p, s, loss
+
+    losses = []
+    for i in range(30):
+        p, state, loss = step(p, state, jax.random.PRNGKey(i))
+        losses.append(float(loss))
+    assert losses[-1] < 0.7 * losses[0]
+    assert float(psnr(p, cfg, x)) > 10.0
+    assert 0.0 <= float(proxy_accuracy(p, cfg, x)) <= 1.0
+
+
+def test_more_compression_worse_or_equal_reconstruction():
+    """Assumption-1 direction: lower rho should not reconstruct better."""
+    x = image_batch(jax.random.PRNGKey(1), 16)
+    final = {}
+    for rho in (0.25, 1.0):
+        cfg = AEConfig(rho=rho, hidden=8)
+        p = init_params(jax.random.PRNGKey(0), cfg)
+        init, update = adamw(3e-3)
+        state = init(p)
+        step = jax.jit(lambda p, s, k: (lambda l, g: update(g, s, p) + (l,))(
+            *jax.value_and_grad(lambda q: mse_loss(q, cfg, x, k))(p)))
+        for i in range(40):
+            p, state, _ = step(p, state, jax.random.PRNGKey(i))
+        final[rho] = float(mse_loss(p, cfg, x))
+    assert final[0.25] >= final[1.0] * 0.9
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_image_batch_deterministic():
+    a = image_batch(jax.random.PRNGKey(3), 4)
+    b = image_batch(jax.random.PRNGKey(3), 4)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(a.min()) >= -1.0 and float(a.max()) <= 1.0
+
+
+def test_token_batch_in_vocab():
+    table = make_bigram_table(jax.random.PRNGKey(0), 128)
+    toks = token_batch(jax.random.PRNGKey(1), table, 4, 32)
+    assert toks.shape == (4, 33)
+    assert int(toks.min()) >= 0 and int(toks.max()) < 128
+
+
+def test_partition_clients_sums():
+    sizes = partition_clients(jax.random.PRNGKey(0), 8, pool=1024)
+    assert len(sizes) == 8 and (sizes >= 16).all()
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(seed=st.integers(0, 1000))
+def test_adamw_descends_quadratic(seed):
+    target = jax.random.normal(jax.random.PRNGKey(seed), (8,))
+    params = {"w": jnp.zeros((8,))}
+    init, update = adamw(0.1)
+    state = init(params)
+    loss = lambda p: jnp.sum(jnp.square(p["w"] - target))
+    for _ in range(100):
+        g = jax.grad(loss)(params)
+        params, state = update(g, state, params)
+    assert float(loss(params)) < 0.05
+
+
+def test_sgd_momentum_matches_reference():
+    params = {"w": jnp.ones((3,))}
+    init, update = sgd(0.1, momentum=0.9)
+    state = init(params)
+    g = {"w": jnp.ones((3,))}
+    p1, state = update(g, state, params)      # v=1, w=1-0.1
+    p2, _ = update(g, state, p1)              # v=1.9, w=0.9-0.19
+    np.testing.assert_allclose(np.asarray(p2["w"]), 0.9 - 0.19, rtol=1e-6)
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    np.testing.assert_allclose(float(norm), 10.0, rtol=1e-6)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(lr(0)) == 0.0
+    np.testing.assert_allclose(float(lr(10)), 1.0, rtol=1e-5)
+    assert float(lr(100)) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip():
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "nested": {"b": jnp.ones((4,), jnp.bfloat16)},
+    }
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ckpt.npz")
+        save(path, tree)
+        out = restore(path, jax.tree.map(jnp.zeros_like, tree))
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+    assert out["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_shape_mismatch_raises():
+    tree = {"a": jnp.ones((2, 3))}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ckpt.npz")
+        save(path, tree)
+        with pytest.raises(ValueError):
+            restore(path, {"a": jnp.ones((3, 2))})
+
+
+# ---------------------------------------------------------------------------
+# FL driver
+# ---------------------------------------------------------------------------
+
+def test_fl_round_reduces_loss_and_allocates():
+    from repro.fl.federated import FLConfig, run_fl, topk_sparsify, tree_bits
+
+    cfg = AEConfig(rho=1.0, hidden=8, base_latent=4)
+    p = init_params(jax.random.PRNGKey(0), cfg)
+
+    def loss_fn(q, batch, k):
+        return mse_loss(q, cfg, batch, k)
+
+    def client_batch(k, i):
+        return image_batch(k, 4)
+
+    eval_batch = image_batch(jax.random.PRNGKey(77), 16)
+    loss_before = float(mse_loss(p, cfg, eval_batch))
+    params, hist = run_fl(
+        jax.random.PRNGKey(0), p, loss_fn, client_batch,
+        FLConfig(rounds=4, n_clients=4, n_subcarriers=12, local_steps=3),
+    )
+    loss_after = float(mse_loss(params, cfg, eval_batch))
+    assert loss_after < loss_before  # held-out eval improves
+    for h in hist:
+        assert h.energy > 0 and h.t_fl > 0 and 0 < h.rho <= 1.0
+
+
+def test_topk_sparsify_keeps_fraction():
+    from repro.fl.federated import topk_sparsify
+
+    u = {"w": jnp.arange(100, dtype=jnp.float32) - 50.0}
+    sp = topk_sparsify(u, 0.2)
+    nz = int(jnp.sum(sp["w"] != 0))
+    assert 15 <= nz <= 25
+    # the largest-|.| entries survive
+    assert float(sp["w"][0]) == -50.0 and float(sp["w"][99]) == 49.0
