@@ -1,0 +1,102 @@
+"""Batched vs sequential allocation: the perf case for `solve_batch`.
+
+Solves B i.i.d. scenarios three ways:
+
+  * ``sequential_eager`` — a Python loop of plain `solve` calls, the seed's
+    `fl/federated.py` pattern (per-op dispatch every round);
+  * ``sequential_jit``   — a jitted single-scenario `solve`, compiled once,
+    called B times (one device program per scenario);
+  * ``batched``          — ONE jitted `solve_batch` call over the stacked
+    scenarios (one device program for the whole sweep).
+
+Writes ``BENCH_allocator.json`` at the repo root so future PRs have a perf
+trajectory to compare against. Run as ``python -m benchmarks.bench_allocator``.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import platform
+import time
+
+import jax
+
+from repro.core import (
+    AllocatorConfig,
+    Weights,
+    sample_params_batch,
+    solve,
+    solve_batch,
+    tree_index,
+)
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+OUT_JSON = ROOT / "BENCH_allocator.json"
+# quick runs extrapolate the eager baseline — methodologically different
+# numbers must not clobber the committed full-run trajectory file
+OUT_JSON_QUICK = ROOT / "experiments" / "bench" / "BENCH_allocator_quick.json"
+
+
+def _bench(fn, warmup: int = 1, reps: int = 1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps
+
+
+def run(quick: bool = False, seed: int = 0, batch: int = 16, n: int = 4, k: int = 12):
+    w = Weights.ones()
+    cfg = AllocatorConfig(inner="pgd")
+    pb = sample_params_batch(jax.random.PRNGKey(seed), batch, N=n, K=k)
+    scenarios = [tree_index(pb, i) for i in range(batch)]
+
+    t_batched = _bench(lambda: solve_batch(pb, w, cfg).alloc.rho)
+
+    solve_jit = jax.jit(lambda p: solve(p, w, cfg))
+    t_seq_jit = _bench(
+        lambda: [solve_jit(p).alloc.rho for p in scenarios]
+    )
+
+    # eager loop: warm once so jax's eager fragment caches are hot — this is
+    # still generous to the baseline relative to the seed's cold-start rounds
+    n_eager = 2 if quick else batch
+    solve(scenarios[0], w, cfg)
+    t0 = time.perf_counter()
+    for p in scenarios[:n_eager]:
+        jax.block_until_ready(solve(p, w, cfg).alloc.rho)
+    t_seq_eager = (time.perf_counter() - t0) / n_eager * batch
+
+    result = {
+        "batch": batch,
+        "N": n,
+        "K": k,
+        "inner": cfg.inner,
+        "batched_s": t_batched,
+        "sequential_jit_s": t_seq_jit,
+        "sequential_eager_s": t_seq_eager,
+        "sequential_eager_extrapolated": n_eager != batch,
+        "speedup_vs_eager_loop": t_seq_eager / t_batched,
+        "speedup_vs_jit_loop": t_seq_jit / t_batched,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "jax_version": jax.__version__,
+        "python_version": platform.python_version(),
+        "platform": platform.platform(),
+    }
+    out = OUT_JSON_QUICK if quick else OUT_JSON
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(result, indent=2) + "\n")
+
+    checks = {
+        "batched_3x_faster_than_solve_loop": result["speedup_vs_eager_loop"] >= 3.0,
+        "batched_not_slower_than_jit_loop": result["speedup_vs_jit_loop"] >= 1.0,
+    }
+    return [result], checks
+
+
+if __name__ == "__main__":
+    rows, checks = run()
+    print(json.dumps(rows[0], indent=2))
+    print("checks:", checks)

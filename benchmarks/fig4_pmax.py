@@ -1,10 +1,15 @@
 """Paper Fig. 4: energy & time vs maximum transmit power, proposed vs the four
-baselines. Claim: proposed has the lowest total energy at every P_max."""
+baselines. Claim: proposed has the lowest total energy at every P_max.
+
+The P_max sweep shares (N, K), so all sweep points are stacked with
+`stack_params` and solved in ONE batched `solve_batch` call per method
+variant instead of a Python loop of per-point solves.
+"""
 from __future__ import annotations
 
 import jax
 
-from .common import run_baselines, run_proposed, weights, write_csv
+from .common import run_baselines, run_proposed_batch, weights, write_csv
 from repro.core import sample_params
 
 PMAX_DBM = (12.0, 16.0, 20.0, 24.0)
@@ -14,11 +19,14 @@ def run(quick: bool = True, seed: int = 0):
     w = weights()
     rows = []
     sweep = PMAX_DBM[1::2] if quick else PMAX_DBM
-    for pmax in sweep:
-        params = sample_params(jax.random.PRNGKey(seed), p_max_dbm=pmax)
-        rep = run_proposed(params, w)
+    # same key for every point: identical channels, only the power budget moves
+    params_list = [
+        sample_params(jax.random.PRNGKey(seed), p_max_dbm=pmax) for pmax in sweep
+    ]
+    reps_sca = run_proposed_batch(params_list, w, inner="sca")
+    reps_pgd = run_proposed_batch(params_list, w, inner="pgd")
+    for pmax, params, rep, rep_pgd in zip(sweep, params_list, reps_sca, reps_pgd):
         rows.append({"pmax_dbm": pmax, "method": "proposed", **rep})
-        rep_pgd = run_proposed(params, w, inner="pgd")
         rows.append({"pmax_dbm": pmax, "method": "proposed_pgd", **rep_pgd})
         for name, r in run_baselines(params, w, jax.random.PRNGKey(seed + 1)).items():
             rows.append({"pmax_dbm": pmax, "method": name, **r})
@@ -27,11 +35,26 @@ def run(quick: bool = True, seed: int = 0):
     checks = {}
     for pmax in sweep:
         sub = {r["method"]: r for r in rows if r["pmax_dbm"] == pmax}
-        best = min(v["objective"] for k, v in sub.items() if k not in ("proposed", "proposed_pgd"))
-        checks[f"beats_baselines@{pmax}dBm"] = (
-            min(sub["proposed"]["objective"], sub["proposed_pgd"]["objective"])
-            <= best + 1e-3
-        )
+        # compare objectives against FEASIBLE points only: comm_only keeps
+        # rho = 1 but violates the SemCom deadline (13f) at low p_max, so its
+        # objective is not an attainable point of P1 — and the proposed side
+        # must itself be feasible to claim the win
+        feas_base = [
+            v["objective"] for k, v in sub.items()
+            if k not in ("proposed", "proposed_pgd") and v["feasible"]
+        ]
+        feas_prop = [
+            sub[k]["objective"] for k in ("proposed", "proposed_pgd")
+            if sub[k]["feasible"]
+        ]
+        if not feas_prop:
+            checks[f"beats_baselines@{pmax}dBm"] = False  # proposed infeasible
+        elif not feas_base:
+            checks[f"beats_baselines@{pmax}dBm"] = "skipped (no feasible baseline)"
+        else:
+            checks[f"beats_baselines@{pmax}dBm"] = (
+                min(feas_prop) <= min(feas_base) + 1e-3
+            )
         checks[f"lowest_energy@{pmax}dBm"] = (
             min(sub["proposed"]["energy_total"], sub["proposed_pgd"]["energy_total"])
             <= min(v["energy_total"] for k, v in sub.items() if "proposed" not in k) * 1.05

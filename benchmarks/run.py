@@ -14,11 +14,12 @@ import time
 
 
 def _modules():
-    from . import (alg_analysis, fig3_weights, fig4_pmax,
+    from . import (alg_analysis, bench_allocator, fig3_weights, fig4_pmax,
                    fig5_users_subcarriers, fig6_workloads, fig8_accuracy,
                    table2_exhaustive, roofline_report)
 
     return {
+        "bench_allocator": bench_allocator,
         "fig3_weights": fig3_weights,
         "fig4_pmax": fig4_pmax,
         "fig5_users_subcarriers": fig5_users_subcarriers,

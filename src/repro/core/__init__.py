@@ -1,11 +1,15 @@
 """FedSem core: the paper's resource-allocation contribution in JAX."""
 from .accuracy import AccuracyFn, default_accuracy, fit_power_law
-from .allocator import AllocatorConfig, AllocatorResult, solve
-from .channel import sample_params
-from .types import Allocation, SystemParams, Weights, dbm_to_watt
+from .allocator import AllocatorConfig, AllocatorResult, solve, solve_batch
+from .channel import sample_params, sample_params_batch
+from .types import (
+    Allocation, SystemParams, Weights, dbm_to_watt, stack_params, tree_index,
+)
 
 __all__ = [
     "AccuracyFn", "default_accuracy", "fit_power_law",
-    "AllocatorConfig", "AllocatorResult", "solve",
-    "sample_params", "Allocation", "SystemParams", "Weights", "dbm_to_watt",
+    "AllocatorConfig", "AllocatorResult", "solve", "solve_batch",
+    "sample_params", "sample_params_batch",
+    "Allocation", "SystemParams", "Weights", "dbm_to_watt",
+    "stack_params", "tree_index",
 ]

@@ -83,6 +83,27 @@ def low_power_start(params: SystemParams, margin: float = 1.5):
     return f, P, X
 
 
+def full_payload_start(
+    params: SystemParams, weights: Weights, pgd_cfg: PGDConfig = PGDConfig()
+):
+    """(P, X) pre-optimised by PGD at rho = 1 (full SemCom payload).
+
+    The alternation's fixed point is init-dependent (see `low_power_start`):
+    both existing starts can settle at rho < 1, trading accuracy for energy,
+    even when the accuracy weight makes rho ~ 1 optimal. Pre-optimising
+    (P, X) against the full payload with the rho = 1 rate floor — exactly the
+    communication-only subproblem — gives Alg. A2 a start whose Theorem-1
+    step keeps rho high, so the multi-start argmin dominates the
+    comm-opt-only baseline by construction (same (P, X) engine, plus the
+    closed-form optimal (f, rho, T) on top).
+    """
+    f, P, X = equal_start(params)
+    payload = params.D + params.C                       # rho = 1
+    rmin = params.C / params.t_sc_max                   # SemCom deadline floor
+    P, X = solve_p4_pgd(params, weights.kappa1, payload, rmin, P, X, pgd_cfg)
+    return f, P, X
+
+
 def repair_rate_floor(params: SystemParams, P, X, rmin, iters: int = 30):
     """Per-device multiplicative power rescale so r_n >= rmin_n (bisection).
 
@@ -138,22 +159,70 @@ def solve(
     cfg: AllocatorConfig = AllocatorConfig(),
     accuracy: AccuracyFn | None = None,
 ) -> AllocatorResult:
-    """Alg. A2 with multi-start (equal + low-power inits), best kept.
+    """Alg. A2 with multi-start (equal + low-power + full-payload inits),
+    best kept.
 
     inner="auto" additionally races the paper-faithful SCA path against the
     PGD cross-check solver and keeps the better allocation.
     """
     acc = accuracy or default_accuracy()
     inners = ("sca", "pgd") if cfg.inner == "auto" else (cfg.inner,)
+    starts = (
+        equal_start(params),
+        low_power_start(params),
+        full_payload_start(params, weights, cfg.pgd),
+    )
     results = [
         _solve_from(params, weights, cfg._replace(inner=inner), acc, start)
         for inner in inners
-        for start in (equal_start(params), low_power_start(params))
+        for start in starts
     ]
     objs = jnp.stack([objective(params, weights, r.alloc, acc) for r in results])
     best = jnp.argmin(objs)
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *results)
     return jax.tree.map(lambda x: x[best], stacked)
+
+
+@partial(jax.jit, static_argnames=("cfg", "weights_batched"))
+def _solve_batch_jit(params_batch, weights, acc, cfg, weights_batched):
+    w_axis = 0 if weights_batched else None
+    return jax.vmap(
+        lambda p, w: solve(p, w, cfg, acc), in_axes=(0, w_axis)
+    )(params_batch, weights)
+
+
+def solve_batch(
+    params_batch: SystemParams,
+    weights: Weights,
+    cfg: AllocatorConfig = AllocatorConfig(),
+    accuracy: AccuracyFn | None = None,
+    *,
+    weights_batched: bool = False,
+) -> AllocatorResult:
+    """Batched Alg. A2: solve B scenarios in one jitted, vmapped call.
+
+    ``params_batch`` is a batch-stacked ``SystemParams`` (`stack_params` /
+    `sample_params_batch`), ``g`` of shape (B, N, K). The full pipeline —
+    multi-start, the P3/P5/PGD inner solvers, rate-floor repair and
+    `harden_x` — is vmapped, so the whole sweep is a single XLA program:
+    tracing happens once per (shape, cfg), not once per scenario, and the
+    per-scenario math batches into wide kernels. Returns an `AllocatorResult`
+    whose leaves carry a leading B axis (use `repro.core.tree_index` to pick
+    one scenario out).
+
+    ``weights`` is broadcast to every scenario unless ``weights_batched`` is
+    set, in which case its leaves must carry a matching leading B axis (used
+    for weight sweeps, paper Fig. 3).
+    """
+    if params_batch.g.ndim != 3:
+        raise ValueError(
+            "solve_batch expects batch-stacked params with g of shape "
+            f"(B, N, K); got g.shape={tuple(params_batch.g.shape)}. "
+            "Stack scenarios with stack_params() or sample them with "
+            "sample_params_batch()."
+        )
+    acc = accuracy or default_accuracy()
+    return _solve_batch_jit(params_batch, weights, acc, cfg, weights_batched)
 
 
 def _solve_from(

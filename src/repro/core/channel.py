@@ -61,3 +61,15 @@ def sample_params(
         q=q,
         eta=eta,
     )
+
+
+def sample_params_batch(key: jax.Array, batch: int, **kwargs) -> SystemParams:
+    """Draw ``batch`` i.i.d. scenarios stacked on a leading axis.
+
+    Same per-scenario defaults as `sample_params`; the result feeds
+    `repro.core.solve_batch` directly (``g`` has shape (batch, N, K)).
+    """
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    keys = jax.random.split(key, batch)
+    return jax.vmap(lambda k: sample_params(k, **kwargs))(keys)

@@ -58,6 +58,19 @@ class SystemParams:
     eta: int = 10
     q: int = 2
 
+    def __post_init__(self):
+        # Constraint (13d) allocates each subcarrier to at most one device and
+        # the allocator guarantees >= 1 subcarrier per device after hardening
+        # (`harden_x`) — both are only satisfiable when K >= N. Validate here
+        # (meta fields are python ints, so this is jit/vmap-safe) instead of
+        # letting `equal_start` silently leave devices with no subcarriers.
+        if self.K < self.N:
+            raise ValueError(
+                f"SystemParams requires K >= N (each of the N={self.N} devices "
+                f"needs at least one of the K={self.K} subcarriers to satisfy "
+                "the rate floor); got K < N"
+            )
+
     @property
     def bbar(self) -> float:
         """Per-subcarrier bandwidth B/K [Hz]."""
@@ -67,6 +80,33 @@ class SystemParams:
     def noise_sc(self) -> float:
         """Noise power per subcarrier N0 * Bbar [W]."""
         return self.N0 * self.bbar
+
+
+def stack_params(params_list) -> "SystemParams":
+    """Stack SystemParams pytrees over a new leading batch axis.
+
+    All scenarios must share the meta fields (N, K, B, N0, xi, eta, q) —
+    those are static under jit, so a batch is one compiled program. Shapes
+    become ``g: (B, N, K)`` and ``(B, N)`` for the per-device vectors.
+    """
+    params_list = list(params_list)
+    if not params_list:
+        raise ValueError("stack_params needs at least one SystemParams")
+    ref = params_list[0]
+    meta = ("N", "K", "B", "N0", "xi", "eta", "q")
+    for i, p in enumerate(params_list[1:], start=1):
+        bad = [f for f in meta if getattr(p, f) != getattr(ref, f)]
+        if bad:
+            raise ValueError(
+                f"stack_params: scenario {i} differs from scenario 0 in static "
+                f"field(s) {bad}; batched solves require identical meta"
+            )
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *params_list)
+
+
+def tree_index(tree, i):
+    """Select scenario ``i`` from a batch-stacked pytree (inverse of stack)."""
+    return jax.tree.map(lambda x: x[i], tree)
 
 
 @partial(

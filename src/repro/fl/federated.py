@@ -1,17 +1,18 @@
 """Federated-learning substrate (paper Stage 1) wired to the resource allocator.
 
-Per FL round:
-  1. a wireless scenario is sampled (block fading, paper §III) with per-client
-     upload size D_n = rho-compressed update bits and compute c_n d_n taken
-     from the *actual* model being trained;
-  2. Alg. A2 (`repro.core.solve`) allocates subcarriers / powers / CPU
-     frequencies / the compression rate rho;
-  3. every client runs `local_steps` of SGD on its shard (vmapped across
+All rounds' wireless scenarios are pre-sampled (block fading is i.i.d.
+across rounds, paper §III) with per-client upload size D_n = rho-compressed
+update bits and compute c_n d_n taken from the *actual* model being trained,
+and Alg. A2 allocates subcarriers / powers / CPU frequencies / the
+compression rate rho for *every* round in one batched, jitted call
+(`repro.core.solve_batch`) before training starts — the per-round Python
+loop used to re-trace `solve` each round. Then, per FL round:
+  1. every client runs `local_steps` of SGD on its shard (vmapped across
      clients), uploads a top-|rho| sparsified update (the LM-world analogue of
      the paper's semantic compression — DESIGN.md §5), and the server
      aggregates with FedAvg weights d_n;
-  4. the round's energy/delay are computed from the allocation via the
-     system model and accumulated into the history.
+  2. the round's energy/delay are computed from the round's pre-solved
+     allocation via the system model and accumulated into the history.
 
 The driver is model-agnostic: pass any (init_params, loss_fn, batch_stream).
 """
@@ -23,7 +24,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import AllocatorConfig, Weights, sample_params, solve
+from repro.core import (
+    AllocatorConfig,
+    AllocatorResult,
+    SystemParams,
+    Weights,
+    sample_params,
+    solve_batch,
+    stack_params,
+    tree_index,
+)
 from repro.core.system import report
 from repro.optim.optimizers import sgd
 
@@ -47,6 +57,37 @@ class RoundStats(NamedTuple):
     t_fl: float
     objective: float
     upload_bits: float
+
+
+def round_channel_key(key: jax.Array, rnd: int) -> jax.Array:
+    """Channel key for round ``rnd`` — shared by the batched planner and any
+    sequential reference so both sample identical scenarios."""
+    return jax.random.split(jax.random.fold_in(key, rnd), 3)[0]
+
+
+def plan_allocations(
+    key: jax.Array, cfg: FLConfig, d_bits: float, weights: Weights
+) -> tuple[SystemParams, AllocatorResult]:
+    """Pre-sample every round's scenario and solve all allocations at once.
+
+    Returns the batch-stacked ``SystemParams`` (leading axis = round) and the
+    batched `AllocatorResult` from a single `solve_batch` call — one trace /
+    compile for the whole FL run instead of one per round.
+    """
+    scenarios = [
+        sample_params(
+            round_channel_key(key, rnd),
+            N=cfg.n_clients,
+            K=cfg.n_subcarriers,
+            D_bits=d_bits,
+        )
+        for rnd in range(cfg.rounds)
+    ]
+    sys_batch = stack_params(scenarios)
+    res = solve_batch(
+        sys_batch, weights, AllocatorConfig(inner=cfg.allocator_inner)
+    )
+    return sys_batch, res
 
 
 def topk_sparsify(update, frac):
@@ -99,18 +140,18 @@ def run_fl(
 
     multi_train = jax.jit(jax.vmap(local_train, in_axes=(None, 0, 0)))
 
+    # --- resource allocation for ALL rounds in one batched solve (paper core)
+    sys_batch, batch_res = plan_allocations(key, cfg, d_bits, w)
+
     history: list[RoundStats] = []
     for rnd in range(cfg.rounds):
         k_round = jax.random.fold_in(key, rnd)
-        k_chan, k_data, k_train = jax.random.split(k_round, 3)
+        _, k_data, k_train = jax.random.split(k_round, 3)
 
-        # --- resource allocation for this round (paper core) ---
-        sys_params = sample_params(
-            k_chan, N=cfg.n_clients, K=cfg.n_subcarriers, D_bits=d_bits
-        )
-        res = solve(sys_params, w, AllocatorConfig(inner=cfg.allocator_inner))
-        rho = float(res.alloc.rho)
-        stats = report(sys_params, w, res.alloc)
+        sys_params = tree_index(sys_batch, rnd)
+        alloc = tree_index(batch_res.alloc, rnd)
+        rho = float(alloc.rho)
+        stats = report(sys_params, w, alloc)
 
         # --- local training (vmapped over clients) ---
         batches = jax.vmap(

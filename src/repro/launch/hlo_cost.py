@@ -73,6 +73,38 @@ def _first_shape(text: str):
     return m.group(1), [int(d) for d in m.group(2).split(",") if d]
 
 
+_OPERAND_NAME = re.compile(r"%?([\w\.\-]+)$")
+
+
+def _split_operands(text: str) -> list:
+    """Split an HLO operand list on top-level commas and keep only the
+    operand *names*.
+
+    Operand tokens carry their full type text (``f32[256,256]{1,0} %p``), so a
+    naive ``split(",")`` shreds tokens on shape commas and the resulting
+    strings never match the computation's shape table — downstream consumers
+    (`_dot_flops` contraction size, HBM operand bytes) silently fall back to
+    empty shapes. Track bracket depth across ``([{`` and take the trailing
+    identifier of each token.
+    """
+    out = []
+    depth = 0
+    tok = ""
+    for ch in text + ",":
+        if ch == "," and depth == 0:
+            m = _OPERAND_NAME.search(tok.strip())
+            if m:
+                out.append(m.group(1))
+            tok = ""
+            continue
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        tok += ch
+    return out
+
+
 @dataclasses.dataclass
 class Instr:
     name: str
@@ -174,11 +206,7 @@ def parse_hlo(text: str) -> dict[str, Computation]:
                     depth += 1
                 elif c == ")":
                     if depth == 0:
-                        ops_text = rest[start:i]
-                        operands = [
-                            o.strip().lstrip("%")
-                            for o in ops_text.split(",") if o.strip()
-                        ]
+                        operands = _split_operands(rest[start:i])
                         break
                     depth -= 1
         cur.shapes[name] = result_text

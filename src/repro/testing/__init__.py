@@ -1,0 +1,4 @@
+"""Test-support utilities (dependency fallbacks; no jax imports here)."""
+from ._hypothesis_shim import install_hypothesis_fallback
+
+__all__ = ["install_hypothesis_fallback"]

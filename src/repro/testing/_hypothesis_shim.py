@@ -1,0 +1,140 @@
+"""Minimal `hypothesis` fallback so the property tests run without the
+real package installed.
+
+The execution image bakes in the jax toolchain but no property-testing
+library, and the build rules forbid installing new packages at test time.
+`pyproject.toml` declares the real ``hypothesis`` under the ``test`` extra —
+environments that can install it (CI does) get the real engine, and
+``tests/conftest.py`` only installs this shim when the import fails.
+
+Scope is deliberately tiny — exactly the subset the test suite uses:
+
+  * ``hypothesis.settings(max_examples=..., deadline=...)`` as a decorator
+    (applied above ``given``),
+  * ``hypothesis.given(**kwargs)`` with keyword strategies,
+  * ``hypothesis.strategies.integers(min_value, max_value)``,
+  * ``hypothesis.strategies.floats(min_value, max_value)``,
+  * ``assume`` / ``note`` / ``HealthCheck`` no-ops.
+
+Examples are drawn from a PRNG seeded by the test's qualified name, so runs
+are deterministic; there is no shrinking or example database.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import sys
+import types
+import zlib
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value=0, max_value=2**31 - 1) -> _Strategy:
+    lo, hi = int(min_value), int(max_value)
+    return _Strategy(lambda rng: rng.randint(lo, hi))
+
+
+def floats(min_value=0.0, max_value=1.0, **_ignored) -> _Strategy:
+    lo, hi = float(min_value), float(max_value)
+    return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def sampled_from(elements) -> _Strategy:
+    pool = list(elements)
+    return _Strategy(lambda rng: rng.choice(pool))
+
+
+class settings:
+    """Settings object usable as a decorator, like the real one."""
+
+    def __init__(self, max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+        self.max_examples = int(max_examples)
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._shim_max_examples = self.max_examples
+        return fn
+
+
+def given(*pos_strategies, **kw_strategies):
+    if pos_strategies:
+        raise TypeError("hypothesis shim supports keyword strategies only")
+
+    def deco(fn):
+        sig = inspect.signature(fn)
+        passthrough = [
+            p for name, p in sig.parameters.items() if name not in kw_strategies
+        ]
+
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for _ in range(n):
+                drawn = {
+                    k: s.example_from(rng) for k, s in kw_strategies.items()
+                }
+                fn(*args, **kwargs, **drawn)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        # hide the strategy params from pytest's fixture resolution
+        wrapper.__signature__ = sig.replace(parameters=passthrough)
+        return wrapper
+
+    return deco
+
+
+def assume(condition) -> bool:
+    return bool(condition)
+
+
+def note(_msg) -> None:
+    pass
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+    @classmethod
+    def all(cls):
+        return [cls.too_slow, cls.data_too_large, cls.filter_too_much]
+
+
+def install_hypothesis_fallback() -> None:
+    """Register shim modules as `hypothesis` / `hypothesis.strategies`.
+
+    No-op if the real package is importable or a shim is already installed.
+    """
+    if "hypothesis" in sys.modules:
+        return
+    hyp = types.ModuleType("hypothesis")
+    strat = types.ModuleType("hypothesis.strategies")
+    for mod_fn in (integers, floats, booleans, sampled_from):
+        setattr(strat, mod_fn.__name__, mod_fn)
+    hyp.settings = settings
+    hyp.given = given
+    hyp.assume = assume
+    hyp.note = note
+    hyp.HealthCheck = HealthCheck
+    hyp.strategies = strat
+    hyp.__version__ = "0.0.0-fedsem-shim"
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat

@@ -6,7 +6,25 @@ the build brief; smoke tests and benchmarks should see a realistic host.)
 Must run before the first jax import in the test process.
 """
 import os
+import pathlib
+import sys
 
 os.environ["XLA_FLAGS"] = (
     "--xla_force_host_platform_device_count=4 " + os.environ.get("XLA_FLAGS", "")
 )
+
+# src-layout import without requiring PYTHONPATH (tier-1 sets it; bare pytest
+# runs and IDEs don't)
+_SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+# Prefer the real hypothesis (declared in pyproject's `test` extra); fall back
+# to the vendored shim where it cannot be installed. Jax-free import, so the
+# XLA_FLAGS-before-jax ordering above is preserved.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    from repro.testing import install_hypothesis_fallback
+
+    install_hypothesis_fallback()

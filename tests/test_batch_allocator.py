@@ -1,0 +1,139 @@
+"""Batched multi-scenario engine: solve_batch == per-scenario solve,
+feasibility of every batched allocation, stacking/validation edge cases, and
+the FL driver's pre-planned allocations vs the sequential path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AllocatorConfig,
+    Weights,
+    sample_params,
+    sample_params_batch,
+    solve,
+    solve_batch,
+    stack_params,
+    tree_index,
+)
+from repro.core.system import feasible
+
+CFG = AllocatorConfig(inner="pgd")
+W = Weights.ones()
+B = 4
+
+
+@pytest.fixture(scope="module")
+def scenarios():
+    return [sample_params(jax.random.PRNGKey(i), N=4, K=12) for i in range(B)]
+
+
+@pytest.fixture(scope="module")
+def batch_result(scenarios):
+    return solve_batch(stack_params(scenarios), W, CFG)
+
+
+def test_solve_batch_shapes(scenarios, batch_result):
+    assert batch_result.alloc.P.shape == (B, 4, 12)
+    assert batch_result.alloc.X.shape == (B, 4, 12)
+    assert batch_result.alloc.f.shape == (B, 4)
+    assert batch_result.alloc.rho.shape == (B,)
+    assert batch_result.trace.shape[0] == B
+
+
+def test_solve_batch_matches_sequential(scenarios, batch_result):
+    """vmapped Alg. A2 == per-scenario solve: same hardened X, same trace."""
+    solve_jit = jax.jit(lambda p: solve(p, W, CFG))
+    for i, params in enumerate(scenarios):
+        ref = solve_jit(params)
+        got = tree_index(batch_result, i)
+        np.testing.assert_array_equal(np.asarray(got.alloc.X), np.asarray(ref.alloc.X))
+        np.testing.assert_allclose(
+            np.asarray(got.alloc.P), np.asarray(ref.alloc.P), rtol=1e-4, atol=1e-9
+        )
+        np.testing.assert_allclose(
+            np.asarray(got.alloc.f), np.asarray(ref.alloc.f), rtol=1e-4
+        )
+        np.testing.assert_allclose(
+            np.asarray(got.alloc.rho), np.asarray(ref.alloc.rho), rtol=1e-4
+        )
+        np.testing.assert_allclose(
+            np.asarray(got.trace), np.asarray(ref.trace), rtol=1e-3
+        )
+
+
+def test_solve_batch_all_feasible(scenarios, batch_result):
+    for i, params in enumerate(scenarios):
+        alloc = tree_index(batch_result.alloc, i)
+        assert bool(feasible(params, alloc)), f"scenario {i} infeasible"
+        assert np.isfinite(np.asarray(batch_result.trace[i])).all()
+
+
+def test_sample_params_batch_stacks():
+    pb = sample_params_batch(jax.random.PRNGKey(0), 3, N=4, K=12)
+    assert pb.g.shape == (3, 4, 12)
+    assert pb.p_max.shape == (3, 4)
+    assert pb.N == 4 and pb.K == 12  # meta stays scalar
+    # scenarios are distinct draws
+    assert float(jnp.max(jnp.abs(pb.g[0] - pb.g[1]))) > 0
+
+
+def test_stack_params_rejects_meta_mismatch():
+    a = sample_params(jax.random.PRNGKey(0), N=4, K=12)
+    b = sample_params(jax.random.PRNGKey(1), N=4, K=16)
+    with pytest.raises(ValueError, match="static"):
+        stack_params([a, b])
+
+
+def test_stack_params_rejects_empty():
+    with pytest.raises(ValueError):
+        stack_params([])
+
+
+def test_solve_batch_rejects_unbatched():
+    params = sample_params(jax.random.PRNGKey(0), N=4, K=12)
+    with pytest.raises(ValueError, match="batch-stacked"):
+        solve_batch(params, W, CFG)
+
+
+def test_k_less_than_n_rejected():
+    """Regression: N > K used to leave devices without subcarriers
+    (`equal_start` round-robin + `harden_x` can't fix it); now it's a clear
+    constructor error."""
+    with pytest.raises(ValueError, match="K >= N"):
+        sample_params(jax.random.PRNGKey(0), N=8, K=4)
+
+
+def test_fl_plan_matches_sequential_solve():
+    """The FL driver's one-shot batched plan == the seed's per-round solve."""
+    from repro.fl.federated import FLConfig, plan_allocations, round_channel_key
+
+    cfg = FLConfig(n_clients=3, n_subcarriers=6, rounds=3)
+    d_bits = 1.0e4
+    w = Weights.ones()
+    sys_batch, res = plan_allocations(jax.random.PRNGKey(5), cfg, d_bits, w)
+    assert sys_batch.g.shape == (cfg.rounds, 3, 6)
+
+    solve_jit = jax.jit(
+        lambda p: solve(p, w, AllocatorConfig(inner=cfg.allocator_inner))
+    )
+    for rnd in range(cfg.rounds):
+        params = sample_params(
+            round_channel_key(jax.random.PRNGKey(5), rnd),
+            N=cfg.n_clients,
+            K=cfg.n_subcarriers,
+            D_bits=d_bits,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(tree_index(sys_batch, rnd).g), np.asarray(params.g)
+        )
+        ref = solve_jit(params)
+        np.testing.assert_array_equal(
+            np.asarray(tree_index(res.alloc.X, rnd)), np.asarray(ref.alloc.X)
+        )
+        np.testing.assert_allclose(
+            np.asarray(tree_index(res.alloc.rho, rnd)),
+            np.asarray(ref.alloc.rho),
+            rtol=1e-4,
+        )
+        assert bool(feasible(params, tree_index(res.alloc, rnd)))
