@@ -10,7 +10,7 @@ import jax.numpy as jnp
 
 from repro.core import (
     AllocatorConfig, SystemParams, Weights, sample_params, solve, solve_batch,
-    stack_params, tree_index,
+    stack_params, stack_weights, tree_index,
 )
 from repro.core import baselines as B
 from repro.core.system import feasible, report
@@ -58,6 +58,36 @@ def run_proposed_batch(scenarios, w, inner="sca"):
         p_i, a_i = tree_index(pb, i), tree_index(res.alloc, i)
         rep = {k: float(v) for k, v in report(p_i, w, a_i).items()}
         rep["feasible"] = bool(feasible(p_i, a_i))
+        rep["runtime_s"] = dt / n
+        reports.append(rep)
+    return reports
+
+
+def run_proposed_weights_batch(params, weights_list, inner="sca"):
+    """Solve ONE scenario under many weight settings in ONE batched call.
+
+    Replicates ``params`` over the leading axis and stacks the per-point
+    `Weights` with a matching batch axis (`solve_batch(weights_batched=True)`)
+    so a whole weight sweep (paper Fig. 3) is a single jitted program instead
+    of per-point solves. Returns per-point report dicts; ``runtime_s`` is the
+    batched wall-clock amortised over the sweep.
+    """
+    weights_list = list(weights_list)
+    n = len(weights_list)
+    pb = stack_params([params] * n)
+    wb = stack_weights(weights_list)
+    cfg = AllocatorConfig(inner=inner)
+    jax.block_until_ready(
+        solve_batch(pb, wb, cfg, weights_batched=True)
+    )  # warm-up: trace+compile
+    res, dt = timed(
+        lambda: jax.block_until_ready(solve_batch(pb, wb, cfg, weights_batched=True))
+    )
+    reports = []
+    for i in range(n):
+        a_i = tree_index(res.alloc, i)
+        rep = {k: float(v) for k, v in report(params, weights_list[i], a_i).items()}
+        rep["feasible"] = bool(feasible(params, a_i))
         rep["runtime_s"] = dt / n
         reports.append(rep)
     return reports

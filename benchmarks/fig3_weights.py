@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import jax
 
-from .common import run_proposed, weights, write_csv
+from .common import run_proposed_weights_batch, weights, write_csv
 from repro.core import sample_params
 
 SWEEP = (0.25, 1.0, 4.0, 16.0)
@@ -17,14 +17,20 @@ SWEEP = (0.25, 1.0, 4.0, 16.0)
 
 def run(quick: bool = True, seed: int = 0):
     params = sample_params(jax.random.PRNGKey(seed))
-    rows = []
     sweep = SWEEP[1:3] if quick else SWEEP
+    # the whole 3 x len(sweep) grid is ONE jitted solve_batch call with a
+    # batched Weights axis (weights_batched=True) — one compile, wide kernels
+    points = []
     for which in ("kappa1", "kappa2", "kappa3"):
         for val in sweep:
             kw = {"k1": 1.0, "k2": 1.0, "k3": 1.0}
             kw["k" + which[-1]] = val
-            rep = run_proposed(params, weights(**kw))
-            rows.append({"sweep": which, "value": val, **rep})
+            points.append((which, val, weights(**kw)))
+    reports = run_proposed_weights_batch(params, [w for _, _, w in points])
+    rows = [
+        {"sweep": which, "value": val, **rep}
+        for (which, val, _), rep in zip(points, reports)
+    ]
     write_csv("fig3_weights", rows)
 
     checks = {}

@@ -14,12 +14,13 @@ import time
 
 
 def _modules():
-    from . import (alg_analysis, bench_allocator, fig3_weights, fig4_pmax,
-                   fig5_users_subcarriers, fig6_workloads, fig8_accuracy,
-                   table2_exhaustive, roofline_report)
+    from . import (alg_analysis, bench_allocator, bench_serve, fig3_weights,
+                   fig4_pmax, fig5_users_subcarriers, fig6_workloads,
+                   fig8_accuracy, table2_exhaustive, roofline_report)
 
     return {
         "bench_allocator": bench_allocator,
+        "bench_serve": bench_serve,
         "fig3_weights": fig3_weights,
         "fig4_pmax": fig4_pmax,
         "fig5_users_subcarriers": fig5_users_subcarriers,

@@ -1,15 +1,18 @@
 """FedSem core: the paper's resource-allocation contribution in JAX."""
 from .accuracy import AccuracyFn, default_accuracy, fit_power_law
 from .allocator import AllocatorConfig, AllocatorResult, solve, solve_batch
-from .channel import sample_params, sample_params_batch
+from .channel import sample_params, sample_params_batch, sample_request_stream
 from .types import (
-    Allocation, SystemParams, Weights, dbm_to_watt, stack_params, tree_index,
+    DEFAULT_BUCKETS, Allocation, ShapeBucket, SystemParams, Weights,
+    bucket_for, dbm_to_watt, pad_params, stack_params, stack_weights,
+    tree_index, unpad_alloc,
 )
 
 __all__ = [
     "AccuracyFn", "default_accuracy", "fit_power_law",
     "AllocatorConfig", "AllocatorResult", "solve", "solve_batch",
-    "sample_params", "sample_params_batch",
+    "sample_params", "sample_params_batch", "sample_request_stream",
     "Allocation", "SystemParams", "Weights", "dbm_to_watt",
-    "stack_params", "tree_index",
+    "stack_params", "stack_weights", "tree_index",
+    "ShapeBucket", "DEFAULT_BUCKETS", "bucket_for", "pad_params", "unpad_alloc",
 ]

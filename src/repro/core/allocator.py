@@ -50,10 +50,16 @@ class AllocatorResult:
 
 
 def equal_start(params: SystemParams):
-    """Round-robin X, per-subcarrier power Pmax/|K_n|, f = fmax/2 (warm start)."""
+    """Round-robin X, per-subcarrier power Pmax/|K_n|, f = fmax/2 (warm start).
+
+    Mask-aware: real subcarriers are round-robined over the *real* devices
+    (padded entries get nothing), so a padded scenario starts from exactly the
+    same assignment as its exact-shape twin.
+    """
     k_idx = jnp.arange(params.K)
-    owner = k_idx % params.N
-    X = jnp.zeros((params.N, params.K)).at[owner, k_idx].set(1.0)
+    n_real = jnp.maximum(jnp.sum(params.dev_mask), 1.0).astype(jnp.int32)
+    owner = k_idx % n_real
+    X = jnp.zeros((params.N, params.K)).at[owner, k_idx].set(params.sc_mask)
     n_sc = jnp.sum(X, axis=-1, keepdims=True)
     P = X * params.p_max[:, None] / jnp.maximum(n_sc, 1.0)
     f = params.f_max * 0.5
@@ -137,20 +143,31 @@ def repair_rate_floor(params: SystemParams, P, X, rmin, iters: int = 30):
     return P * s[:, None]
 
 
-def harden_x(X: jnp.ndarray, N: int, K: int) -> jnp.ndarray:
-    """Binary X: argmax per subcarrier, then guarantee >=1 subcarrier/device."""
-    assign = jnp.argmax(X, axis=0)  # (K,)
+def harden_x(X: jnp.ndarray, N: int, K: int, dev_mask=None, sc_mask=None) -> jnp.ndarray:
+    """Binary X: argmax per subcarrier, then guarantee >=1 subcarrier/device.
+
+    With masks (padded scenarios, see `pad_params`): padded devices never win
+    or steal a subcarrier, padded subcarriers stay unassigned, and ownership
+    counts / donor checks consider real subcarriers only — so the real block
+    of the hardened assignment is identical to hardening the exact-shape
+    scenario.
+    """
+    if dev_mask is None:
+        dev_mask = jnp.ones((N,), X.dtype)
+    if sc_mask is None:
+        sc_mask = jnp.ones((K,), X.dtype)
+    assign = jnp.argmax(jnp.where(dev_mask[:, None] > 0.0, X, -jnp.inf), axis=0)
 
     def fix_device(n, assign):
-        counts = jnp.zeros((N,), jnp.int32).at[assign].add(1)
-        has = counts[n] > 0
-        donor_ok = counts[assign] > 1                   # only steal from the rich
+        counts = jnp.zeros((N,), X.dtype).at[assign].add(sc_mask)  # real subcarriers
+        need = (counts[n] < 0.5) & (dev_mask[n] > 0.0)
+        donor_ok = (counts[assign] > 1.5) & (sc_mask > 0.0)  # only steal real sc from the rich
         score = jnp.where(donor_ok, X[n], -jnp.inf)
         k_star = jnp.argmax(score)
-        return jnp.where(has, assign, assign.at[k_star].set(n))
+        return jnp.where(need, assign.at[k_star].set(n), assign)
 
     assign = jax.lax.fori_loop(0, N, fix_device, assign)
-    return jnp.zeros((N, K)).at[assign, jnp.arange(K)].set(1.0)
+    return jnp.zeros((N, K)).at[assign, jnp.arange(K)].set(sc_mask)
 
 
 def solve(
@@ -221,6 +238,19 @@ def solve_batch(
             "Stack scenarios with stack_params() or sample them with "
             "sample_params_batch()."
         )
+    if weights_batched:
+        b = params_batch.g.shape[0]
+        for path, leaf in jax.tree_util.tree_leaves_with_path(weights):
+            shape = jnp.shape(leaf)
+            if len(shape) < 1 or shape[0] != b:
+                raise ValueError(
+                    "solve_batch(weights_batched=True) requires every weights "
+                    f"leaf to carry a leading batch axis of size B={b} matching "
+                    f"params_batch; leaf 'weights{jax.tree_util.keystr(path)}' "
+                    f"has shape {shape}. Stack per-scenario weights with "
+                    "stack_weights(weights_list), or drop weights_batched to "
+                    "broadcast one Weights to all scenarios."
+                )
     acc = accuracy or default_accuracy()
     return _solve_batch_jit(params_batch, weights, acc, cfg, weights_batched)
 
@@ -254,7 +284,7 @@ def _solve_from(
     (f, P, X), trace = jax.lax.scan(outer, (f, P, X), None, length=cfg.outer_iters)
 
     # ---- hardening: binary X, re-solved powers, re-derived (f, rho) ----
-    Xb = harden_x(X, params.N, params.K)
+    Xb = harden_x(X, params.N, params.K, params.dev_mask, params.sc_mask)
     p3 = solve_p3(params, weights, P * Xb, Xb, acc)
     payload = params.D + p3.rho * params.C
     rmin = r_min(params, p3.rho, p3.T, p3.f)

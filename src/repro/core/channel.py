@@ -73,3 +73,30 @@ def sample_params_batch(key: jax.Array, batch: int, **kwargs) -> SystemParams:
         raise ValueError(f"batch must be >= 1, got {batch}")
     keys = jax.random.split(key, batch)
     return jax.vmap(lambda k: sample_params(k, **kwargs))(keys)
+
+
+def sample_request_stream(
+    key: jax.Array,
+    n_requests: int,
+    *,
+    sizes=((3, 8), (4, 12), (6, 16)),
+    bbar: float = 20e6 / 50,
+    **kwargs,
+) -> list:
+    """Draw a heterogeneous scenario stream for the serving layer.
+
+    Each request picks a uniform (N, K) from ``sizes`` and shares the same
+    per-subcarrier bandwidth ``bbar`` (total bandwidth B = bbar * K scales
+    with K). Sharing bbar is what lets different-size requests pad into the
+    same `ShapeBucket` and batch through one compiled solve — bbar is the
+    only way bandwidth enters the rate math, and `pad_params` preserves it.
+    Returns a list of exact-shape `SystemParams` (the service pads them).
+    """
+    if n_requests < 1:
+        raise ValueError(f"n_requests must be >= 1, got {n_requests}")
+    out = []
+    for i in range(n_requests):
+        k_size, k_params = jax.random.split(jax.random.fold_in(key, i))
+        n, k = sizes[int(jax.random.randint(k_size, (), 0, len(sizes)))]
+        out.append(sample_params(k_params, N=n, K=k, B=bbar * k, **kwargs))
+    return out

@@ -65,8 +65,9 @@ def solve_rho(
     cost = jnp.sum(weights.kappa1 * p_n * params.C / jnp.maximum(r, 1e-12))
 
     def delta(rho):
+        # accuracy gain counts real devices only (padded ones have dev_mask 0)
         return cost - weights.kappa3 * jnp.sum(
-            jnp.broadcast_to(accuracy.deriv(rho), (params.N,))
+            params.dev_mask * accuracy.deriv(rho)
         )
 
     # Delta is increasing in rho (A' decreasing). Root in [_RHO_LO, 1] if sign
@@ -76,8 +77,11 @@ def solve_rho(
         _RHO_LO,
         jnp.where(delta(1.0) <= 0.0, 1.0, _bisect(delta, jnp.float32(_RHO_LO), jnp.float32(1.0))),
     )
+    # padded devices have C = 0; max() keeps their deadline ratio finite and
+    # huge so they never bind rho_max
     rho_max = jnp.minimum(
-        1.0, jnp.min(params.t_sc_max * jnp.maximum(r, 1e-12) / params.C)
+        1.0,
+        jnp.min(params.t_sc_max * jnp.maximum(r, 1e-12) / jnp.maximum(params.C, 1e-30)),
     )
     return jnp.clip(jnp.minimum(rho_hash, rho_max), _RHO_LO, 1.0)
 

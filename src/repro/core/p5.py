@@ -94,6 +94,16 @@ def _inner_primal_dual(params, weights, payload_nd, rmin_nd, y, x_bar, init, cfg
     P0, X0, sigma0 = init
     g_nd = params.g / params.noise_sc          # SNR per watt, (N, K)
     pmax = params.p_max[:, None]
+    # padded devices/subcarriers (see `pad_params`) are pinned to zero after
+    # every primal step; for all-real scenarios this multiplies by ones
+    m2 = params.dev_mask[:, None] * params.sc_mask[None, :]
+    n_real = jnp.maximum(jnp.sum(params.dev_mask), 1.0)
+
+    def dev_mean(x):
+        # mean over *real* devices: padded entries must not skew the Adam
+        # learning-rate scales below (padded p_max/sigma are placeholders)
+        return jnp.sum(x * params.dev_mask) / n_real
+
     _LN2 = 0.6931471805599453
 
     def rate_nd(P, X):
@@ -132,11 +142,11 @@ def _inner_primal_dual(params, weights, payload_nd, rmin_nd, y, x_bar, init, cfg
         gP, gX, gS = (jnp.nan_to_num(g, posinf=1e6, neginf=-1e6) for g in (gP, gX, gS))
         # normalise primal gradients to their variable scales
         (mP, vP), (mX, vX), (mS, vS) = moms
-        dP, mP, vP = _adam(gP, mP, vP, t, cfg.lr_primal * jnp.mean(params.p_max))
+        dP, mP, vP = _adam(gP, mP, vP, t, cfg.lr_primal * dev_mean(params.p_max))
         dX, mX, vX = _adam(gX, mX, vX, t, cfg.lr_primal)
-        dS, mS, vS = _adam(gS, mS, vS, t, cfg.lr_primal * jnp.maximum(jnp.mean(sigma), 0.01))
-        P = jnp.clip(P + dP, 0.0, pmax)
-        X = jnp.clip(X + dX, 0.0, 1.0)
+        dS, mS, vS = _adam(gS, mS, vS, t, cfg.lr_primal * jnp.maximum(dev_mean(sigma), 0.01))
+        P = jnp.clip(P + dP, 0.0, pmax) * m2
+        X = jnp.clip(X + dX, 0.0, 1.0) * m2
         sigma = jnp.maximum(sigma + dS, 1e-4)
 
         beta, iota, lam, nu = duals
@@ -154,7 +164,11 @@ def _inner_primal_dual(params, weights, payload_nd, rmin_nd, y, x_bar, init, cfg
         jnp.zeros((params.N, params.K)),
         jnp.full((params.N,), 0.1),
         # nu scaled from interior stationarity (42): nu = 2 y k1 sigma^3/payload
-        jnp.maximum(2.0 * y * weights.kappa1 * sigma0**3 / payload_nd, cfg.nu_min),
+        # (payload floored: padded devices carry payload 0 and their nu is inert)
+        jnp.maximum(
+            2.0 * y * weights.kappa1 * sigma0**3 / jnp.maximum(payload_nd, 1e-30),
+            cfg.nu_min,
+        ),
     )
     zeros = lambda x: (jnp.zeros_like(x), jnp.zeros_like(x))
     moms0 = (zeros(P0), zeros(X0), zeros(sigma0))

@@ -58,9 +58,20 @@ def _budgeted_power(params: SystemParams, P_raw, w_tot):
 
 
 def _decode(params: SystemParams, z, w, w_tot, temp):
-    """(z logits (N+1,K), w (N,K), w_tot (N,)) -> feasible (P, X)."""
+    """(z logits (N+1,K), w (N,K), w_tot (N,)) -> feasible (P, X).
+
+    Padded devices (dev_mask = 0, see `pad_params`) are excluded from the
+    per-subcarrier softmax with a -1e9 logit — exp underflows to exactly 0,
+    so the softmax over the remaining rows matches the exact-shape program —
+    and padded subcarriers are zeroed so no power lands on them. All-ones
+    masks reduce this to the unmasked decode bit-for-bit.
+    """
+    row_mask = jnp.concatenate(
+        [params.dev_mask, jnp.ones((1,), params.dev_mask.dtype)]  # keep "unassigned"
+    )
+    z = jnp.where(row_mask[:, None] > 0.0, z, -1e9)
     x_full = jax.nn.softmax(z / temp, axis=0)        # (N+1, K)
-    X = x_full[:-1]                                  # drop the "unassigned" row
+    X = x_full[:-1] * params.sc_mask[None, :]        # drop the "unassigned" row
     q = float(params.q)
     P_raw = params.p_max[:, None] * (X**q) * jax.nn.sigmoid(w)
     return _budgeted_power(params, P_raw, w_tot), X

@@ -87,7 +87,10 @@ def objective(
     e_t, e_c, e_sc = energy_breakdown(params, alloc)
     total_e = jnp.sum(e_t + e_c + e_sc)
     t = t_fl(params, alloc)
-    a = jnp.sum(jnp.broadcast_to(acc.value(alloc.rho), (params.N,)))
+    # sum A_n(rho) over *real* devices only — padded devices (dev_mask = 0,
+    # see `pad_params`) already contribute zero energy/delay, and masking here
+    # keeps the accuracy reward identical to the exact-shape scenario too
+    a = jnp.sum(params.dev_mask * acc.value(alloc.rho))
     return weights.kappa1 * total_e + weights.kappa2 * t - weights.kappa3 * a
 
 

@@ -1,0 +1,19 @@
+"""Allocation serving layer: micro-batched scenario service over `solve_batch`.
+
+The pipeline is  request -> `pad_params` into a `ShapeBucket` -> per-bucket
+admission queue (`MicroBatcher`) -> one AOT-compiled `solve_batch` executable
+per (bucket, batch-slots, AllocatorConfig) -> hardened exact-shape
+`Allocation` back to the caller, with p50/p95 latency, queue-depth and
+batch-occupancy metrics along the way.
+"""
+from .batching import BatchPolicy, MicroBatcher, PendingRequest
+from .loadgen import LoadResult, poisson_arrivals, run_load
+from .metrics import ServiceMetrics, percentile
+from .service import AllocService, Completion, ServeConfig
+
+__all__ = [
+    "AllocService", "Completion", "ServeConfig",
+    "BatchPolicy", "MicroBatcher", "PendingRequest",
+    "ServiceMetrics", "percentile",
+    "LoadResult", "poisson_arrivals", "run_load",
+]

@@ -1,0 +1,101 @@
+"""Poisson-arrival load generator for `AllocService` (virtual-clock DES).
+
+Arrivals happen on a *virtual* clock (exponential inter-arrival gaps at a
+target rate); solves consume *measured* wall-clock seconds on that same
+clock. This hybrid discrete-event simulation gives reproducible arrival
+patterns while charging the service its true compute cost — so throughput
+and tail latency are honest, but a 100 req/s experiment doesn't need 100
+real req/s of wall time.
+
+Event loop semantics (single server): the next event is either the next
+arrival or the earliest bucket deadline; a size-triggered flush runs
+immediately after the admitting arrival; while a batch solves, the clock
+advances by the measured solve time, so requests arriving "during" a solve
+accrue queue wait exactly as they would against a busy real server.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import numpy as np
+
+from repro.core import SystemParams, Weights
+
+from .service import AllocService, Completion
+
+
+def poisson_arrivals(key: jax.Array, n: int, rate_hz: float) -> np.ndarray:
+    """n arrival times (seconds, ascending) of a Poisson process at rate_hz."""
+    if rate_hz <= 0:
+        raise ValueError(f"rate_hz must be > 0, got {rate_hz}")
+    gaps = np.asarray(jax.random.exponential(key, (n,))) / rate_hz
+    return np.cumsum(gaps)
+
+
+class LoadResult(NamedTuple):
+    completions: list          # list[Completion], completion order
+    throughput_rps: float      # completed / makespan
+    makespan_s: float          # first arrival -> last completion (virtual)
+    busy_s: float              # total solve wall time charged to the clock
+    summary: dict              # ServiceMetrics.summary() snapshot
+
+
+def run_load(
+    service: AllocService,
+    requests: list[SystemParams],
+    arrivals,
+    weights: list[Weights] | None = None,
+) -> LoadResult:
+    """Drive ``service`` with ``requests[i]`` arriving at ``arrivals[i]``.
+
+    Returns every completion (the run always drains). ``weights`` optionally
+    carries per-request objective weights.
+    """
+    if len(requests) != len(arrivals):
+        raise ValueError(
+            f"requests ({len(requests)}) and arrivals ({len(arrivals)}) differ"
+        )
+    arrivals = [float(t) for t in arrivals]
+    if any(b < a for a, b in zip(arrivals, arrivals[1:])):
+        raise ValueError("arrivals must be non-decreasing")
+
+    clock = 0.0
+    busy_total = 0.0
+    completions: list[Completion] = []
+    i, n = 0, len(requests)
+
+    while i < n or service.pending() > 0:
+        # arrivals are physical events: everything with t_arr <= clock already
+        # happened (possibly while the server was busy solving) and must be in
+        # the queues before any flush decision at `clock`
+        while i < n and arrivals[i] <= clock:
+            service.submit(
+                requests[i],
+                weights[i] if weights is not None else None,
+                now=arrivals[i],
+            )
+            i += 1
+        # full buckets flush first — at saturation this is what fills batches
+        done, busy = service.flush_full(now=clock)
+        if not done:
+            deadline = service.next_deadline()
+            t_arr = arrivals[i] if i < n else None
+            if deadline is not None and (t_arr is None or deadline <= t_arr):
+                clock = max(clock, deadline)
+                done, busy = service.flush_due(now=clock)
+            elif t_arr is not None:
+                clock = max(clock, t_arr)   # idle until the next arrival
+                continue
+        completions.extend(done)
+        clock += busy
+        busy_total += busy
+
+    makespan = max((clock - arrivals[0]), 1e-12) if arrivals else 0.0
+    return LoadResult(
+        completions=completions,
+        throughput_rps=len(completions) / makespan if makespan else 0.0,
+        makespan_s=makespan,
+        busy_s=busy_total,
+        summary=service.metrics.summary(),
+    )

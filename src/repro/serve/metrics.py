@@ -1,0 +1,76 @@
+"""Serving metrics: latency percentiles, queue depth, batch occupancy, cache.
+
+Plain-python accumulators (the service's control plane is host-side; only the
+solves run on device), so they are cheap to sample on every submit/flush and
+trivially serialisable into benchmark JSON.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def percentile(values, q: float) -> float:
+    """q-th percentile (0..100, linear interpolation); nan on empty."""
+    if not values:
+        return float("nan")
+    return float(np.percentile(np.asarray(values, dtype=np.float64), q))
+
+
+@dataclasses.dataclass
+class ServiceMetrics:
+    """Per-service counters and reservoirs (one instance per `AllocService`)."""
+
+    latencies_s: list = dataclasses.field(default_factory=list)   # arrival -> done
+    waits_s: list = dataclasses.field(default_factory=list)       # arrival -> flush
+    solves_s: list = dataclasses.field(default_factory=list)      # per batch
+    queue_depth: list = dataclasses.field(default_factory=list)   # sampled on submit
+    occupancy: list = dataclasses.field(default_factory=list)     # real / slots
+    submitted: int = 0
+    completed: int = 0
+    batches: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    compile_s: float = 0.0
+
+    def observe_submit(self, depth: int) -> None:
+        self.submitted += 1
+        self.queue_depth.append(depth)
+
+    def observe_batch(self, n_real: int, slots: int, solve_s: float) -> None:
+        self.batches += 1
+        self.occupancy.append(n_real / max(slots, 1))
+        self.solves_s.append(solve_s)
+
+    def observe_completion(self, latency_s: float, wait_s: float) -> None:
+        self.completed += 1
+        self.latencies_s.append(latency_s)
+        self.waits_s.append(wait_s)
+
+    def observe_cache(self, hit: bool, compile_s: float = 0.0) -> None:
+        if hit:
+            self.cache_hits += 1
+        else:
+            self.cache_misses += 1
+            self.compile_s += compile_s
+
+    def summary(self) -> dict:
+        mean = lambda xs: float(sum(xs) / len(xs)) if xs else float("nan")
+        return {
+            "requests": self.submitted,
+            "completed": self.completed,
+            "batches": self.batches,
+            "latency_p50_s": percentile(self.latencies_s, 50.0),
+            "latency_p95_s": percentile(self.latencies_s, 95.0),
+            "latency_mean_s": mean(self.latencies_s),
+            "wait_p50_s": percentile(self.waits_s, 50.0),
+            "solve_mean_s": mean(self.solves_s),
+            "queue_depth_max": max(self.queue_depth, default=0),
+            "queue_depth_mean": mean(self.queue_depth),
+            "batch_occupancy_mean": mean(self.occupancy),
+            "mean_batch_size": self.completed / max(self.batches, 1),
+            "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
+            "compile_s": self.compile_s,
+        }

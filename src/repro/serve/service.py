@@ -1,0 +1,257 @@
+"""`AllocService`: micro-batched scenario-allocation serving over `solve_batch`.
+
+Heterogeneous `SystemParams` requests are padded into canonical `ShapeBucket`s
+(`pad_params` masks keep padding inert), queued per bucket, and flushed
+through ONE AOT-compiled `solve_batch` executable per (bucket, batch-slots,
+`AllocatorConfig`). The batch axis is padded to a fixed number of slots by
+replicating the last request, so each bucket compiles exactly once no matter
+how full its flushes run — the compiled-executable cache is the whole point:
+steady-state serving never re-traces.
+
+The service is sans-IO: callers pass ``now`` timestamps and decide when to
+flush (`flush_full` after submits, `flush_due` on timer ticks, `drain` at
+shutdown), which makes it drivable by a real clock (`repro.launch.serve_alloc`)
+or a virtual one (`repro.serve.loadgen`, benchmarks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import NamedTuple
+
+import jax
+
+from repro.core import (
+    Allocation,
+    AllocatorConfig,
+    SystemParams,
+    Weights,
+    bucket_for,
+    pad_params,
+    solve_batch,
+    stack_params,
+    stack_weights,
+    tree_index,
+    unpad_alloc,
+)
+from repro.core.types import DEFAULT_BUCKETS, ShapeBucket
+
+from .batching import BatchPolicy, MicroBatcher, PendingRequest
+from .metrics import ServiceMetrics
+
+
+class ServeConfig(NamedTuple):
+    policy: BatchPolicy = BatchPolicy()
+    #: bucket ladder; None = exact shapes (no padding — every distinct request
+    #: shape compiles its own program; the solve-per-request baseline)
+    buckets: tuple[ShapeBucket, ...] | None = DEFAULT_BUCKETS
+    allocator: AllocatorConfig = AllocatorConfig(inner="pgd")
+    #: pad the batch axis to ``policy.max_batch`` slots so each bucket
+    #: compiles once; False recompiles per observed batch size
+    pad_batch: bool = True
+
+
+def _round_sig(x: float, digits: int = 12) -> float:
+    """Round to ``digits`` significant figures (canonical bucket-key floats).
+
+    Requests built from the same per-subcarrier bandwidth but different K
+    reconstruct the padded ``B = bbar * K_pad`` through different float
+    round-trips and can disagree by an ulp; keyed raw, they would silently
+    land in different queues (and `stack_params` would reject mixing them).
+    12 significant figures absorbs ulp noise (~1e-16 rel) while keeping any
+    physically distinct bandwidth (>= 1e-10 rel apart) distinct.
+    """
+    if x == 0.0 or not math.isfinite(x):
+        return x
+    return round(x, digits - 1 - math.floor(math.log10(abs(x))))
+
+
+class Completion(NamedTuple):
+    """One answered request (exact-shape, hardened, feasible-by-construction)."""
+
+    req_id: int
+    alloc: Allocation
+    bucket: tuple       # (N_pad, K_pad)
+    latency_s: float    # arrival -> answer (queue wait + batched solve)
+    wait_s: float       # arrival -> flush
+    solve_s: float      # the batched solve this request rode in
+
+
+class AllocService:
+    """Micro-batched allocation server (see module docstring)."""
+
+    def __init__(
+        self,
+        cfg: ServeConfig = ServeConfig(),
+        executables: dict[tuple, object] | None = None,
+    ):
+        """``executables`` optionally shares a compiled-solver cache built by
+        another service with the SAME ServeConfig (e.g. a warmed instance in a
+        benchmark sweep); the dict is used and extended in place."""
+        self.cfg = cfg
+        self.batcher = MicroBatcher(cfg.policy)
+        self.metrics = ServiceMetrics()
+        self._executables = executables if executables is not None else {}
+        self._next_id = 0
+
+    @property
+    def executables(self) -> dict[tuple, object]:
+        """The compiled-solver cache, keyed by (bucket key, batch slots,
+        AllocatorConfig) — pass to another AllocService to skip its compiles;
+        a service with a different allocator config safely misses and compiles
+        its own entries."""
+        return self._executables
+
+    # -- admission ----------------------------------------------------------
+
+    def _pad(self, params: SystemParams) -> SystemParams:
+        if self.cfg.buckets is None:
+            return params
+        padded = pad_params(params, bucket_for(params.N, params.K, self.cfg.buckets))
+        # canonicalise B at the service boundary so equal-bbar requests of
+        # different original K stack into one queue (see `_round_sig`);
+        # the core `pad_params` itself stays bit-exact on bbar
+        return dataclasses.replace(padded, B=_round_sig(padded.B))
+
+    @staticmethod
+    def _bucket_key(padded: SystemParams) -> tuple:
+        # shape + every static meta field: one queue == one compiled program
+        return (
+            padded.N, padded.K, padded.B, padded.N0,
+            padded.xi, padded.eta, padded.q,
+        )
+
+    def submit(
+        self, params: SystemParams, weights: Weights | None = None, now: float = 0.0
+    ) -> int:
+        """Admit one scenario; returns its request id. Does not solve — call
+        `flush_full` / `flush_due` / `drain` to get completions."""
+        req_id = self._next_id
+        self._next_id += 1
+        padded = self._pad(params)
+        req = PendingRequest(
+            req_id=req_id,
+            params=params,
+            padded=padded,
+            weights=weights if weights is not None else Weights.ones(),
+            arrival_t=now,
+        )
+        self.batcher.add(self._bucket_key(padded), req)
+        self.metrics.observe_submit(self.batcher.depth())
+        return req_id
+
+    def pending(self) -> int:
+        return self.batcher.depth()
+
+    def next_deadline(self) -> float | None:
+        return self.batcher.next_deadline()
+
+    # -- the compiled-solver cache ------------------------------------------
+
+    def _solver(self, key: tuple, slots: int, params_batch, weights_batch):
+        # AllocatorConfig is part of the key: a shared `executables` dict must
+        # never hand config A's solver to a service running config B
+        cache_key = (key, slots, self.cfg.allocator)
+        exe = self._executables.get(cache_key)
+        if exe is None:
+            cfg = self.cfg.allocator
+            t0 = time.perf_counter()
+            exe = (
+                jax.jit(lambda pb, wb: solve_batch(pb, wb, cfg, weights_batched=True))
+                .lower(params_batch, weights_batch)
+                .compile()
+            )
+            self._executables[cache_key] = exe
+            self.metrics.observe_cache(hit=False, compile_s=time.perf_counter() - t0)
+        else:
+            self.metrics.observe_cache(hit=True)
+        return exe
+
+    def warmup(self, example_params, now: float = 0.0) -> None:
+        """Pre-compile executables for the buckets the given example scenarios
+        land in (serving warm-up, so first requests don't pay compile time).
+
+        With ``pad_batch=True`` (default) every flush uses ``max_batch`` slots,
+        so one compile per bucket covers steady state. With ``pad_batch=False``
+        the slot count follows the observed batch size and only single-request
+        flushes are prewarmed — larger batches still trace on first sight
+        (that recompile churn is why ``pad_batch=False`` is not the default).
+        """
+        seen: dict[tuple, SystemParams] = {}
+        for p in example_params:
+            padded = self._pad(p)
+            seen.setdefault(self._bucket_key(padded), padded)
+        slots = self.cfg.policy.max_batch if self.cfg.pad_batch else 1
+        for key, padded in seen.items():
+            pb = stack_params([padded] * slots)
+            wb = stack_weights([Weights.ones()] * slots)
+            self._solver(key, slots, pb, wb)
+
+    # -- flushing ------------------------------------------------------------
+
+    def _flush_bucket(self, key: tuple, now: float) -> tuple[list[Completion], float]:
+        pending = self.batcher.pop(key)
+        n_real = len(pending)
+        slots = self.cfg.policy.max_batch if self.cfg.pad_batch else n_real
+        # pad the batch axis by replicating the last request: same shape ->
+        # same executable; replicas are solved and discarded
+        filled = pending + [pending[-1]] * (slots - n_real)
+        pb = stack_params([r.padded for r in filled])
+        wb = stack_weights([r.weights for r in filled])
+        exe = self._solver(key, slots, pb, wb)
+        t0 = time.perf_counter()
+        res = jax.block_until_ready(exe(pb, wb))
+        solve_s = time.perf_counter() - t0
+        self.metrics.observe_batch(n_real, slots, solve_s)
+
+        out = []
+        for i, req in enumerate(pending):
+            alloc = unpad_alloc(
+                tree_index(res.alloc, i), req.params.N, req.params.K
+            )
+            wait = now - req.arrival_t
+            latency = wait + solve_s
+            self.metrics.observe_completion(latency, wait)
+            out.append(
+                Completion(
+                    req_id=req.req_id,
+                    alloc=alloc,
+                    bucket=(key[0], key[1]),
+                    latency_s=latency,
+                    wait_s=wait,
+                    solve_s=solve_s,
+                )
+            )
+        return out, solve_s
+
+    def _flush_while(self, select, now: float) -> tuple[list[Completion], float]:
+        """Flush buckets returned by ``select()`` until none qualify. A queue
+        deeper than ``max_batch`` (burst arrivals) flushes in successive
+        batches; ``select`` is re-evaluated after every round."""
+        completions: list[Completion] = []
+        busy = 0.0
+        while True:
+            keys = select()
+            if not keys:
+                return completions, busy
+            for key in keys:
+                # single-server semantics: batches run back-to-back, so
+                # requests in a later bucket also wait out earlier solves
+                done, solve_s = self._flush_bucket(key, now + busy)
+                completions.extend(done)
+                busy += solve_s
+
+    def flush_full(self, now: float) -> tuple[list[Completion], float]:
+        """Flush buckets that reached ``max_batch``. Returns (completions,
+        busy seconds spent solving)."""
+        return self._flush_while(self.batcher.full_keys, now)
+
+    def flush_due(self, now: float) -> tuple[list[Completion], float]:
+        """Flush buckets that are full or whose oldest request waited out
+        ``max_wait_s`` by ``now``."""
+        return self._flush_while(lambda: self.batcher.due_keys(now), now)
+
+    def drain(self, now: float) -> tuple[list[Completion], float]:
+        """Flush everything (shutdown / end of load run)."""
+        return self._flush_while(self.batcher.keys, now)

@@ -78,6 +78,19 @@ def test_sample_params_batch_stacks():
     assert float(jnp.max(jnp.abs(pb.g[0] - pb.g[1]))) > 0
 
 
+def test_stack_tree_index_roundtrip(scenarios):
+    """tree_index(stack_params(xs), i) == xs[i], leaf for leaf (incl. masks)."""
+    pb = stack_params(scenarios)
+    for i, p in enumerate(scenarios):
+        got = tree_index(pb, i)
+        got_leaves, got_def = jax.tree.flatten(got)
+        ref_leaves, ref_def = jax.tree.flatten(p)
+        assert got_def == ref_def
+        for a, b in zip(got_leaves, ref_leaves):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert (got.N, got.K, got.B) == (p.N, p.K, p.B)
+
+
 def test_stack_params_rejects_meta_mismatch():
     a = sample_params(jax.random.PRNGKey(0), N=4, K=12)
     b = sample_params(jax.random.PRNGKey(1), N=4, K=16)

@@ -1,0 +1,288 @@
+"""Serving subsystem: padded-bucket solves == exact-shape solves, every
+admitted request gets a feasible hardened allocation, micro-batching policy,
+compiled-executable cache, and the batched-weights validation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AllocatorConfig,
+    ShapeBucket,
+    Weights,
+    bucket_for,
+    pad_params,
+    sample_params,
+    sample_request_stream,
+    solve,
+    solve_batch,
+    stack_params,
+    stack_weights,
+    tree_index,
+    unpad_alloc,
+)
+from repro.core.allocator import harden_x
+from repro.core.p5 import P5Config
+from repro.core.pgd import PGDConfig
+from repro.core.system import feasible, objective
+from repro.serve import AllocService, BatchPolicy, ServeConfig, poisson_arrivals, run_load
+
+W = Weights.ones()
+# reduced iteration counts keep compiles/solves test-sized; equivalence holds
+# per-config (padded and exact sides always share the config)
+PGD_CFG = AllocatorConfig(inner="pgd", outer_iters=2, pgd=PGDConfig(steps=80))
+SCA_CFG = AllocatorConfig(inner="sca", outer_iters=2, p5=P5Config(outer_iters=2, inner_iters=40))
+SERVE_CFG = ServeConfig(
+    policy=BatchPolicy(max_batch=2, max_wait_s=0.01),
+    allocator=AllocatorConfig(inner="pgd", outer_iters=2, pgd=PGDConfig(steps=40)),
+)
+
+
+# ---------------------------------------------------------------------------
+# padding / mask helpers
+# ---------------------------------------------------------------------------
+
+
+def test_pad_params_shapes_masks_meta():
+    p = sample_params(jax.random.PRNGKey(0), N=3, K=8)
+    pp = pad_params(p, 4, 12)
+    assert pp.g.shape == (4, 12) and pp.N == 4 and pp.K == 12
+    np.testing.assert_array_equal(np.asarray(pp.dev_mask), [1, 1, 1, 0])
+    assert np.asarray(pp.sc_mask).sum() == 8 and np.asarray(pp.sc_mask)[8:].sum() == 0
+    # real block preserved, padding inert
+    np.testing.assert_array_equal(np.asarray(pp.g[:3, :8]), np.asarray(p.g))
+    assert float(jnp.abs(pp.g[3:]).max()) == 0.0
+    assert float(jnp.abs(pp.C[3:]).max()) == 0.0 and float(jnp.abs(pp.d[3:]).max()) == 0.0
+    # per-subcarrier bandwidth is what the rate math sees — preserved exactly
+    assert pp.bbar == pytest.approx(p.bbar, rel=1e-12)
+
+
+def test_pad_params_identity_and_reject_shrink():
+    p = sample_params(jax.random.PRNGKey(0), N=4, K=12)
+    assert pad_params(p, 4, 12) is p
+    with pytest.raises(ValueError, match="shrink"):
+        pad_params(p, 3, 12)
+
+
+def test_bucket_for_picks_smallest_fit():
+    assert bucket_for(3, 8) == ShapeBucket(4, 8)
+    assert bucket_for(4, 12) == ShapeBucket(4, 16)
+    assert bucket_for(10, 50) == ShapeBucket(16, 64)
+    with pytest.raises(ValueError, match="bucket"):
+        bucket_for(1000, 4000)
+
+
+def test_default_masks_are_ones():
+    p = sample_params(jax.random.PRNGKey(1), N=4, K=12)
+    assert float(jnp.min(p.dev_mask)) == 1.0 and p.dev_mask.shape == (4,)
+    assert float(jnp.min(p.sc_mask)) == 1.0 and p.sc_mask.shape == (12,)
+
+
+def test_harden_x_masked_ignores_padding():
+    key = jax.random.PRNGKey(2)
+    X = jax.random.uniform(key, (5, 9))
+    dev_mask = jnp.asarray([1.0, 1.0, 1.0, 0.0, 0.0])
+    sc_mask = jnp.asarray([1.0] * 6 + [0.0] * 3)
+    Xb = np.asarray(harden_x(X * dev_mask[:, None] * sc_mask[None, :], 5, 9, dev_mask, sc_mask))
+    # padded rows/columns stay empty; every real device owns >= 1 real sc
+    assert Xb[3:].sum() == 0 and Xb[:, 6:].sum() == 0
+    assert (Xb[:3, :6].sum(axis=1) >= 1).all()
+    assert (Xb.sum(axis=0) <= 1).all()
+    # real block identical to hardening the exact-shape problem
+    np.testing.assert_array_equal(Xb[:3, :6], np.asarray(harden_x(X[:3, :6], 3, 6)))
+
+
+# ---------------------------------------------------------------------------
+# padded solve == exact solve
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cfg", [PGD_CFG, SCA_CFG], ids=["pgd", "sca"])
+def test_padded_solve_matches_exact(cfg):
+    p = sample_params(jax.random.PRNGKey(0), N=4, K=12)
+    pp = pad_params(p, 8, 16)
+    ref = jax.jit(lambda q: solve(q, W, cfg))(p)
+    pad = jax.jit(lambda q: solve(q, W, cfg))(pp)
+    # padded slots get nothing
+    assert float(jnp.abs(pad.alloc.P[4:]).max()) == 0.0
+    assert float(jnp.abs(pad.alloc.X[:, 12:]).max()) == 0.0
+    a = unpad_alloc(pad.alloc, 4, 12)
+    # discrete assignment must agree exactly; continuous vars to fp-chaos tol
+    np.testing.assert_array_equal(np.asarray(a.X), np.asarray(ref.alloc.X))
+    np.testing.assert_allclose(np.asarray(a.rho), np.asarray(ref.alloc.rho), rtol=5e-3)
+    np.testing.assert_allclose(np.asarray(a.f), np.asarray(ref.alloc.f), rtol=5e-2)
+    np.testing.assert_allclose(
+        float(objective(p, W, a)), float(objective(p, W, ref.alloc)), rtol=1e-2
+    )
+    # the padded scenario's own objective sees the same value (masked accuracy
+    # term, inert padding) — the bucket does not distort the decision problem
+    np.testing.assert_allclose(
+        float(objective(pp, W, pad.alloc)), float(objective(p, W, a)), rtol=1e-5
+    )
+    assert bool(feasible(p, a))
+
+
+def test_padded_mixed_batch_all_feasible():
+    scenarios = sample_request_stream(
+        jax.random.PRNGKey(3), 4, sizes=((3, 8), (4, 8))
+    )
+    padded = [pad_params(s, 4, 8) for s in scenarios]
+    res = solve_batch(stack_params(padded), W, PGD_CFG)
+    for i, s in enumerate(scenarios):
+        a = unpad_alloc(tree_index(res.alloc, i), s.N, s.K)
+        assert bool(feasible(s, a)), f"scenario {i} infeasible"
+
+
+# ---------------------------------------------------------------------------
+# service: admission, micro-batching, cache, metrics
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def load_run():
+    requests = sample_request_stream(
+        jax.random.PRNGKey(7), 6, sizes=((3, 8), (4, 8))
+    )
+    service = AllocService(SERVE_CFG)
+    arrivals = poisson_arrivals(jax.random.PRNGKey(8), len(requests), rate_hz=200.0)
+    result = run_load(service, requests, arrivals)
+    return requests, service, result
+
+
+def test_service_answers_every_request_feasibly(load_run):
+    requests, _, result = load_run
+    assert len(result.completions) == len(requests)
+    assert sorted(c.req_id for c in result.completions) == list(range(len(requests)))
+    for c in result.completions:
+        p = requests[c.req_id]
+        assert c.alloc.P.shape == (p.N, p.K)         # exact shape back
+        assert bool(feasible(p, c.alloc)), f"request {c.req_id} infeasible"
+        # hardened: binary X, every device serviced
+        X = np.asarray(c.alloc.X)
+        assert set(np.unique(X)).issubset({0.0, 1.0})
+        assert (X.sum(axis=1) >= 1).all()
+
+
+def test_service_metrics(load_run):
+    _, service, result = load_run
+    s = result.summary
+    assert s["completed"] == s["requests"] == 6
+    assert s["latency_p95_s"] >= s["latency_p50_s"] > 0
+    assert 0 < s["batch_occupancy_mean"] <= 1
+    assert s["queue_depth_max"] >= 1
+    assert result.throughput_rps > 0
+    # both sizes share the (4, 8) bucket -> exactly one compiled executable
+    assert s["cache_misses"] == 1
+    assert s["cache_hits"] == s["batches"] - 1
+    assert len(service.executables) == 1
+
+
+def test_flush_on_max_batch():
+    service = AllocService(SERVE_CFG)
+    p = sample_params(jax.random.PRNGKey(0), N=4, K=8)
+    service.submit(p, now=0.0)
+    assert service.pending() == 1
+    done, _ = service.flush_full(now=0.0)
+    assert done == [] and service.pending() == 1     # not full yet
+    service.submit(p, now=0.001)
+    done, _ = service.flush_full(now=0.001)          # max_batch=2 reached
+    assert len(done) == 2 and service.pending() == 0
+    assert done[0].wait_s == pytest.approx(0.001)
+
+
+def test_flush_on_max_wait():
+    service = AllocService(SERVE_CFG)
+    p = sample_params(jax.random.PRNGKey(0), N=4, K=8)
+    service.submit(p, now=0.0)
+    assert service.next_deadline() == pytest.approx(0.01)
+    done, _ = service.flush_due(now=0.005)
+    assert done == []                                # not due yet
+    done, _ = service.flush_due(now=0.01)            # max_wait_s hit
+    assert len(done) == 1
+    assert done[0].latency_s >= 0.01                 # waited + solve time
+
+
+def test_per_request_weights_respected():
+    # a request served in the same batch with different weights must see its
+    # own objective trade-off: huge kappa3 pushes rho to ~1
+    p = sample_params(jax.random.PRNGKey(11), N=4, K=8)
+    service = AllocService(SERVE_CFG)
+    service.submit(p, Weights(jnp.float32(1.0), jnp.float32(1.0), jnp.float32(0.0)), now=0.0)
+    service.submit(p, Weights(jnp.float32(1.0), jnp.float32(1.0), jnp.float32(500.0)), now=0.0)
+    (c_lo, c_hi), _ = service.flush_full(now=0.0)
+    assert float(c_hi.alloc.rho) >= float(c_lo.alloc.rho)
+    assert float(c_hi.alloc.rho) > 0.99
+
+
+def test_shared_cache_keyed_by_allocator_config():
+    """A shared executables dict must never serve config A's solver to a
+    service running config B (the cache key includes AllocatorConfig)."""
+    p = sample_params(jax.random.PRNGKey(0), N=4, K=8)
+    a = AllocService(SERVE_CFG)
+    a.warmup([p])
+    assert a.metrics.cache_misses == 1
+    other = SERVE_CFG._replace(
+        allocator=AllocatorConfig(inner="pgd", outer_iters=1, pgd=PGDConfig(steps=20))
+    )
+    b = AllocService(other, executables=a.executables)
+    b.warmup([p])
+    assert b.metrics.cache_misses == 1      # same bucket/slots, different cfg
+    assert len(a.executables) == 2          # both entries live in the shared dict
+
+
+def test_same_bbar_different_k_share_bucket():
+    """Requests built from one bbar with different K must co-batch: the
+    service canonicalises the padded B, so fp round-trip drift (bbar*12/12*16
+    vs bbar*16) cannot split the bucket queue (regression)."""
+    bbar = 8357815.274094777            # reproduces a 1-ulp B split unrounded
+    p12 = sample_params(jax.random.PRNGKey(0), N=4, K=12, B=bbar * 12)
+    p16 = sample_params(jax.random.PRNGKey(1), N=4, K=16, B=bbar * 16)
+    service = AllocService(SERVE_CFG)
+    k1 = service._bucket_key(service._pad(p12))
+    k2 = service._bucket_key(service._pad(p16))
+    assert k1 == k2
+    service.submit(p12, now=0.0)
+    service.submit(p16, now=0.0)
+    done, _ = service.flush_full(now=0.0)   # max_batch=2: only fires co-bucketed
+    assert len(done) == 2
+    for c, p in zip(done, (p12, p16)):
+        assert bool(feasible(p, c.alloc))
+
+
+# ---------------------------------------------------------------------------
+# solve_batch weights validation (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_weights_batched_rejects_scalar_weights():
+    pb = stack_params([sample_params(jax.random.PRNGKey(0), N=4, K=8)] * 3)
+    with pytest.raises(ValueError, match="leading batch axis"):
+        solve_batch(pb, Weights.ones(), PGD_CFG, weights_batched=True)
+
+
+def test_weights_batched_rejects_wrong_batch():
+    pb = stack_params([sample_params(jax.random.PRNGKey(0), N=4, K=8)] * 3)
+    wb = stack_weights([Weights.ones()] * 2)
+    with pytest.raises(ValueError, match="size B=3"):
+        solve_batch(pb, wb, PGD_CFG, weights_batched=True)
+
+
+def test_weights_batched_matches_per_scenario():
+    p = sample_params(jax.random.PRNGKey(1), N=4, K=8)
+    ws = [
+        Weights(jnp.float32(1.0), jnp.float32(1.0), jnp.float32(1.0)),
+        Weights(jnp.float32(4.0), jnp.float32(1.0), jnp.float32(1.0)),
+    ]
+    pb = stack_params([p, p])
+    wb = stack_weights(ws)
+    res = solve_batch(pb, wb, PGD_CFG, weights_batched=True)
+    solve_jit = jax.jit(lambda w: solve(p, w, PGD_CFG))
+    for i, w in enumerate(ws):
+        ref = solve_jit(w)
+        np.testing.assert_array_equal(
+            np.asarray(tree_index(res.alloc.X, i)), np.asarray(ref.alloc.X)
+        )
+        np.testing.assert_allclose(
+            np.asarray(tree_index(res.alloc.rho, i)), np.asarray(ref.alloc.rho),
+            rtol=1e-4,
+        )
