@@ -1,13 +1,21 @@
 """Batched vs sequential allocation: the perf case for `solve_batch`.
 
-Solves B i.i.d. scenarios three ways:
+Solves B i.i.d. scenarios four ways:
 
   * ``sequential_eager`` — a Python loop of plain `solve` calls, the seed's
     `fl/federated.py` pattern (per-op dispatch every round);
   * ``sequential_jit``   — a jitted single-scenario `solve`, compiled once,
     called B times (one device program per scenario);
   * ``batched``          — ONE jitted `solve_batch` call over the stacked
-    scenarios (one device program for the whole sweep).
+    scenarios (one device program for the whole sweep, single device);
+  * ``sharded``          — the same program with the scenario axis split over
+    a `scenario_mesh` of all local devices (B/device_count per device).
+
+The sharded-vs-single-device comparison is only meaningful with >1 device;
+run under ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to measure
+it on CPU (virtual devices share the physical cores, so CPU numbers bound
+overhead rather than demonstrate speedup — the sweep exists so accelerator
+runs land in the same JSON).
 
 Writes ``BENCH_allocator.json`` at the repo root so future PRs have a perf
 trajectory to compare against. Run as ``python -m benchmarks.bench_allocator``.
@@ -20,11 +28,13 @@ import platform
 import time
 
 import jax
+import numpy as np
 
 from repro.core import (
     AllocatorConfig,
     Weights,
     sample_params_batch,
+    scenario_mesh,
     solve,
     solve_batch,
     tree_index,
@@ -54,6 +64,12 @@ def run(quick: bool = False, seed: int = 0, batch: int = 16, n: int = 4, k: int 
 
     t_batched = _bench(lambda: solve_batch(pb, w, cfg).alloc.rho)
 
+    # sharded sweep: same program, scenario axis split over all local devices
+    mesh = scenario_mesh()
+    t_sharded = _bench(lambda: solve_batch(pb, w, cfg, mesh=mesh).alloc.rho)
+    x_single = np.asarray(solve_batch(pb, w, cfg).alloc.X)
+    x_sharded = np.asarray(solve_batch(pb, w, cfg, mesh=mesh).alloc.X)
+
     solve_jit = jax.jit(lambda p: solve(p, w, cfg))
     t_seq_jit = _bench(
         lambda: [solve_jit(p).alloc.rho for p in scenarios]
@@ -74,11 +90,14 @@ def run(quick: bool = False, seed: int = 0, batch: int = 16, n: int = 4, k: int 
         "K": k,
         "inner": cfg.inner,
         "batched_s": t_batched,
+        "sharded_s": t_sharded,
+        "sharded_devices": mesh.size,
         "sequential_jit_s": t_seq_jit,
         "sequential_eager_s": t_seq_eager,
         "sequential_eager_extrapolated": n_eager != batch,
         "speedup_vs_eager_loop": t_seq_eager / t_batched,
         "speedup_vs_jit_loop": t_seq_jit / t_batched,
+        "speedup_sharded_vs_single_device": t_batched / t_sharded,
         "backend": jax.default_backend(),
         "device_count": jax.device_count(),
         "jax_version": jax.__version__,
@@ -92,6 +111,9 @@ def run(quick: bool = False, seed: int = 0, batch: int = 16, n: int = 4, k: int 
     checks = {
         "batched_3x_faster_than_solve_loop": result["speedup_vs_eager_loop"] >= 3.0,
         "batched_not_slower_than_jit_loop": result["speedup_vs_jit_loop"] >= 1.0,
+        # correctness claim, not a perf one: the device split must be invisible
+        # (CPU virtual devices share cores, so no speedup is promised there)
+        "sharded_matches_single_device": bool((x_sharded == x_single).all()),
     }
     return [result], checks
 

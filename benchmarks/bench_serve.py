@@ -45,7 +45,7 @@ SIZES = ((4, 12), (4, 16), (8, 16))
 
 
 def _policies(allocator: AllocatorConfig, max_wait_s: float):
-    return {
+    policies = {
         "service": ServeConfig(
             policy=BatchPolicy(max_batch=MAX_BATCH, max_wait_s=max_wait_s),
             buckets=DEFAULT_BUCKETS,
@@ -57,6 +57,18 @@ def _policies(allocator: AllocatorConfig, max_wait_s: float):
             allocator=allocator,
         ),
     }
+    if jax.device_count() > 1:
+        # scenario-sharded flushes: per-device batch of MAX_BATCH, bucket slots
+        # device_count x MAX_BATCH (skipped on one device, where it would just
+        # duplicate "service"); run under
+        # XLA_FLAGS=--xla_force_host_platform_device_count=N to sweep on CPU
+        policies["service_sharded"] = ServeConfig(
+            policy=BatchPolicy(max_batch=MAX_BATCH, max_wait_s=max_wait_s),
+            buckets=DEFAULT_BUCKETS,
+            allocator=allocator,
+            shard_batch=True,
+        )
+    return policies
 
 
 def run(quick: bool = False, seed: int = 0, smoke: bool | None = None):
@@ -88,6 +100,7 @@ def run(quick: bool = False, seed: int = 0, smoke: bool | None = None):
                     "policy": policy_name,
                     "rate_rps": rate,
                     "max_batch": cfg.policy.max_batch,
+                    "shard_batch": cfg.shard_batch,
                     "throughput_rps": result.throughput_rps,
                     "makespan_s": result.makespan_s,
                     "busy_s": result.busy_s,

@@ -1,7 +1,13 @@
 """FedSem core: the paper's resource-allocation contribution in JAX."""
 from .accuracy import AccuracyFn, default_accuracy, fit_power_law
-from .allocator import AllocatorConfig, AllocatorResult, solve, solve_batch
+from .allocator import (
+    AllocatorConfig, AllocatorResult, sharded_batch_solver, solve, solve_batch,
+)
 from .channel import sample_params, sample_params_batch, sample_request_stream
+from .distribute import (
+    SCENARIO_AXIS, pad_batch, scenario_mesh, scenario_sharding, shard_batch,
+    slice_batch,
+)
 from .types import (
     DEFAULT_BUCKETS, Allocation, ShapeBucket, SystemParams, Weights,
     bucket_for, dbm_to_watt, pad_params, stack_params, stack_weights,
@@ -11,8 +17,11 @@ from .types import (
 __all__ = [
     "AccuracyFn", "default_accuracy", "fit_power_law",
     "AllocatorConfig", "AllocatorResult", "solve", "solve_batch",
+    "sharded_batch_solver",
     "sample_params", "sample_params_batch", "sample_request_stream",
     "Allocation", "SystemParams", "Weights", "dbm_to_watt",
     "stack_params", "stack_weights", "tree_index",
     "ShapeBucket", "DEFAULT_BUCKETS", "bucket_for", "pad_params", "unpad_alloc",
+    "SCENARIO_AXIS", "scenario_mesh", "scenario_sharding", "shard_batch",
+    "pad_batch", "slice_batch",
 ]

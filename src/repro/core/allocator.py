@@ -16,6 +16,7 @@ guarantees the reported allocation is feasible for the *original* P1.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from functools import partial
 from typing import NamedTuple
 
@@ -200,12 +201,40 @@ def solve(
     return jax.tree.map(lambda x: x[best], stacked)
 
 
-@partial(jax.jit, static_argnames=("cfg", "weights_batched"))
-def _solve_batch_jit(params_batch, weights, acc, cfg, weights_batched):
+def _solve_batch_impl(params_batch, weights, acc, cfg, weights_batched):
     w_axis = 0 if weights_batched else None
     return jax.vmap(
         lambda p, w: solve(p, w, cfg, acc), in_axes=(0, w_axis)
     )(params_batch, weights)
+
+
+_solve_batch_jit = jax.jit(
+    _solve_batch_impl, static_argnames=("cfg", "weights_batched")
+)
+
+
+@functools.lru_cache(maxsize=None)
+def sharded_batch_solver(mesh, weights_batched: bool):
+    """Jitted `solve_batch` body with the scenario axis sharded on ``mesh``.
+
+    Explicit in/out shardings split every leading batch axis over the 1-D
+    scenario mesh (`core.distribute`); the per-scenario solves are independent,
+    so XLA partitions the program with no cross-device communication and each
+    device solves B/mesh.size scenarios. Cached per (mesh, weights_batched) —
+    `AllocatorConfig` stays a static jit arg, so one cache entry covers every
+    config. The jit object is also the serving layer's AOT entry point
+    (``.lower(...).compile()``).
+    """
+    from .distribute import replicated, scenario_sharding
+
+    scen = scenario_sharding(mesh)
+    rep = replicated(mesh)
+    return jax.jit(
+        _solve_batch_impl,
+        static_argnames=("cfg", "weights_batched"),
+        in_shardings=(scen, scen if weights_batched else rep, rep),
+        out_shardings=scen,
+    )
 
 
 def solve_batch(
@@ -215,6 +244,7 @@ def solve_batch(
     accuracy: AccuracyFn | None = None,
     *,
     weights_batched: bool = False,
+    mesh=None,
 ) -> AllocatorResult:
     """Batched Alg. A2: solve B scenarios in one jitted, vmapped call.
 
@@ -230,6 +260,12 @@ def solve_batch(
     ``weights`` is broadcast to every scenario unless ``weights_batched`` is
     set, in which case its leaves must carry a matching leading B axis (used
     for weight sweeps, paper Fig. 3).
+
+    ``mesh`` optionally shards the scenario axis across devices (a 1-D
+    `core.distribute.scenario_mesh`): the same vmapped program compiles once
+    with the batch split device_count ways and no cross-device communication.
+    Batches not divisible by ``mesh.size`` are padded by replicating the tail
+    scenario and sliced back — exact, since scenarios are independent.
     """
     if params_batch.g.ndim != 3:
         raise ValueError(
@@ -252,7 +288,21 @@ def solve_batch(
                     "broadcast one Weights to all scenarios."
                 )
     acc = accuracy or default_accuracy()
-    return _solve_batch_jit(params_batch, weights, acc, cfg, weights_batched)
+    if mesh is None:
+        return _solve_batch_jit(params_batch, weights, acc, cfg, weights_batched)
+
+    from .distribute import pad_batch, round_up, slice_batch
+
+    b = params_batch.g.shape[0]
+    b_pad = round_up(b, mesh.size)
+    if b_pad != b:
+        params_batch = pad_batch(params_batch, b_pad)
+        if weights_batched:
+            weights = pad_batch(weights, b_pad)
+    res = sharded_batch_solver(mesh, weights_batched)(
+        params_batch, weights, acc, cfg, weights_batched
+    )
+    return slice_batch(res, b) if b_pad != b else res
 
 
 def _solve_from(

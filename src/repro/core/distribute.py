@@ -1,0 +1,78 @@
+"""Scenario-parallel sharding for the batched allocator (ROADMAP item 1).
+
+`solve_batch` vmaps Alg. A2 over a leading scenario axis and the per-scenario
+solves never talk to each other — the batch is embarrassingly parallel. This
+module builds a 1-D ``jax.sharding.Mesh`` over the local devices (axis name
+``"scenario"``, the `launch/mesh.py` pattern: functions, never module-level
+device state) and the `NamedSharding`s that split that leading axis, so B
+scenarios compile into ONE sharded executable solving B/device_count per
+device with zero cross-device communication.
+
+Everything works on CPU under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the `launch/dryrun.py`
+trick), which is how CI exercises the sharded path without an accelerator.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+#: Mesh axis the batch (leading) dimension of stacked scenario pytrees lives on.
+SCENARIO_AXIS = "scenario"
+
+
+def scenario_mesh(devices=None) -> Mesh:
+    """1-D mesh over ``devices`` (default: all local devices)."""
+    devices = jax.devices() if devices is None else list(devices)
+    return Mesh(np.asarray(devices), (SCENARIO_AXIS,))
+
+
+def scenario_sharding(mesh: Mesh) -> NamedSharding:
+    """Split the leading (scenario) axis across the mesh; trailing axes whole."""
+    return NamedSharding(mesh, PartitionSpec(SCENARIO_AXIS))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    """Fully replicated placement on the mesh (broadcast weights, accuracy fit)."""
+    return NamedSharding(mesh, PartitionSpec())
+
+
+def round_up(b: int, multiple: int) -> int:
+    """Smallest multiple of ``multiple`` that is >= ``b``."""
+    return -(-b // multiple) * multiple
+
+
+def pad_batch(tree, to_size: int):
+    """Pad every leaf's leading axis to ``to_size`` by replicating the tail.
+
+    The per-scenario solves are independent, so tail replicas are exact
+    throwaway work: slice the result back with `slice_batch`. Used to make a
+    batch divisible by the mesh size before sharding.
+    """
+
+    def leaf(x):
+        b = x.shape[0]
+        if b == to_size:
+            return x
+        if b > to_size:
+            raise ValueError(f"pad_batch cannot shrink: batch {b} > {to_size}")
+        reps = jnp.broadcast_to(x[-1:], (to_size - b,) + x.shape[1:])
+        return jnp.concatenate([x, reps], axis=0)
+
+    return jax.tree.map(leaf, tree)
+
+
+def slice_batch(tree, b: int):
+    """Undo `pad_batch`: keep the first ``b`` entries of every leaf."""
+    return jax.tree.map(lambda x: x[:b], tree)
+
+
+def shard_batch(tree, mesh: Mesh):
+    """Place a batch-stacked pytree with its leading axis split on the mesh.
+
+    Every data leaf must carry the batch axis (the `stack_params` /
+    `stack_weights` contract) with size divisible by ``mesh.size``.
+    """
+    return jax.device_put(tree, scenario_sharding(mesh))

@@ -90,6 +90,9 @@ def solve_exhaustive(
             float(params.xi), float(params.eta),
             float(weights.kappa1), float(weights.kappa2), float(weights.kappa3),
             accuracy_ab,
+            # padded scenarios (`pad_params`) score like their exact-shape twin:
+            # real device count, masked reductions, masked feasibility
+            dev_mask=params.dev_mask,
         )
         best = jnp.argmin(obj)
         return obj[best], f_c[best], p_c[best], rho_c[best]

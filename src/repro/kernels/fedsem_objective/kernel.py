@@ -21,7 +21,7 @@ BLOCK_G = 512  # lane-aligned candidate tile (4 x 128)
 
 def _kernel(
     f_ref, p_ref, r_ref, rho_ref,       # (N, BG), (N, BG), (N, BG), (1, BG)
-    c_ref, d_ref, D_ref, C_ref, tsc_ref, fmax_ref,  # (N, 1) each
+    c_ref, d_ref, D_ref, C_ref, tsc_ref, fmax_ref, mask_ref,  # (N, 1) each
     obj_ref,                            # out: (1, BG)
     *, xi: float, eta: float, k1: float, k2: float, k3: float,
     a_acc: float, b_acc: float,
@@ -30,6 +30,7 @@ def _kernel(
     p = p_ref[...]
     r = jnp.maximum(r_ref[...], _EPS)
     rho = rho_ref[...]                  # (1, BG)
+    real = mask_ref[...] > 0.0          # (N, 1) validity (pad_params contract)
 
     cd = c_ref[...] * d_ref[...]        # (N, 1)
     tau = D_ref[...] / r
@@ -37,18 +38,23 @@ def _kernel(
     e_t = p * tau
     e_c = xi * eta * cd * (f * f)
     e_sc = p * rho * C_ref[...] / r
-    t_fl = jnp.max(tau + t_c, axis=0, keepdims=True)          # (1, BG)
+    # padded rows must not leak into any device-axis reduction: select, don't
+    # multiply (a masked multiply turns inf garbage into nan)
+    e_dev = jnp.where(real, e_t + e_c + e_sc, 0.0)
+    t_fl = jnp.max(
+        jnp.where(real, tau + t_c, -jnp.inf), axis=0, keepdims=True
+    )                                                          # (1, BG)
     acc = a_acc * jnp.exp(b_acc * jnp.log(jnp.maximum(rho, 1e-9)))
-    n_dev = f.shape[0]
+    n_dev = jnp.sum(mask_ref[...], axis=0, keepdims=True)      # (1, 1) real count
 
     obj = (
-        k1 * jnp.sum(e_t + e_c + e_sc, axis=0, keepdims=True)
+        k1 * jnp.sum(e_dev, axis=0, keepdims=True)
         + k2 * t_fl
         - k3 * n_dev * acc
     )
     t_sc = rho * C_ref[...] / r
-    bad = jnp.any(t_sc > tsc_ref[...], axis=0, keepdims=True) | jnp.any(
-        f > fmax_ref[...] * (1.0 + 1e-6), axis=0, keepdims=True
+    bad = jnp.any((t_sc > tsc_ref[...]) & real, axis=0, keepdims=True) | jnp.any(
+        (f > fmax_ref[...] * (1.0 + 1e-6)) & real, axis=0, keepdims=True
     )
     obj_ref[...] = jnp.where(bad, jnp.inf, obj)
 
@@ -60,6 +66,7 @@ def _kernel(
 def objective_grid_pallas(
     f_t, p_t, r_t, rho,                 # (N, G) x3, (G,)
     c, d, D, C, t_sc_max, f_max,        # (N,) each
+    dev_mask,                           # (N,) 1 = real device, 0 = padding
     *, xi, eta, k1, k2, k3, a_acc, b_acc, interpret: bool = False,
 ):
     N, G = f_t.shape
@@ -77,7 +84,7 @@ def objective_grid_pallas(
             _kernel, xi=xi, eta=eta, k1=k1, k2=k2, k3=k3, a_acc=a_acc, b_acc=b_acc
         ),
         grid=grid,
-        in_specs=[cand_spec, cand_spec, cand_spec, row_spec] + [vec_spec] * 6,
+        in_specs=[cand_spec, cand_spec, cand_spec, row_spec] + [vec_spec] * 7,
         out_specs=row_spec,
         out_shape=jax.ShapeDtypeStruct((1, G), jnp.float32),
         interpret=interpret,
@@ -87,5 +94,6 @@ def objective_grid_pallas(
         r_t.astype(jnp.float32),
         rho2,
         col(c), col(d), col(D), col(C), col(t_sc_max), col(f_max),
+        col(dev_mask),
     )
     return out[0]

@@ -25,19 +25,28 @@ def objective_grid(
     kappa1: float, kappa2: float, kappa3: float,
     accuracy_ab=(0.6356, 0.4025),
     *,
+    dev_mask=None,
     use_pallas: str | bool = "auto",
     interpret: bool = False,
 ):
-    """Objective (eq. 13) for G candidates. f/p/r: (G, N); rho: (G,)."""
+    """Objective (eq. 13) for G candidates. f/p/r: (G, N); rho: (G,).
+
+    ``dev_mask`` (N,) marks real devices (`pad_params` contract): padded rows
+    are excluded from the device count, the energy/delay reductions and the
+    feasibility checks, so the grid score of a padded scenario matches
+    `system.objective` on the exact-shape one. None = every device real.
+    """
     if use_pallas == "auto":
         use_pallas = jax.default_backend() == "tpu"
     if not use_pallas:
         return ref.objective_grid(
             f, p, r, rho, c, d, D, C, t_sc_max, f_max,
-            xi, eta, kappa1, kappa2, kappa3, accuracy_ab,
+            xi, eta, kappa1, kappa2, kappa3, accuracy_ab, dev_mask,
         )
 
     G = f.shape[0]
+    if dev_mask is None:
+        dev_mask = jnp.ones((jnp.shape(f)[-1],), jnp.float32)
     g_pad = -(-G // kernel.BLOCK_G) * kernel.BLOCK_G
     f_t = _pad_to(jnp.asarray(f, jnp.float32), g_pad).T
     p_t = _pad_to(jnp.asarray(p, jnp.float32), g_pad).T
@@ -45,7 +54,7 @@ def objective_grid(
     rho_p = _pad_to(jnp.asarray(rho, jnp.float32), g_pad, fill=1.0)
     a_acc, b_acc = accuracy_ab
     out = kernel.objective_grid_pallas(
-        f_t, p_t, r_t, rho_p, c, d, D, C, t_sc_max, f_max,
+        f_t, p_t, r_t, rho_p, c, d, D, C, t_sc_max, f_max, dev_mask,
         xi=float(xi), eta=float(eta),
         k1=float(kappa1), k2=float(kappa2), k3=float(kappa3),
         a_acc=float(a_acc), b_acc=float(b_acc),

@@ -18,12 +18,16 @@ def objective_grid(
     xi: float, eta: float,
     kappa1: float, kappa2: float, kappa3: float,
     accuracy_ab=(0.6356, 0.4025),
+    dev_mask=None,
 ):
     f = jnp.asarray(f, jnp.float32)
     p = jnp.asarray(p, jnp.float32)
     r = jnp.maximum(jnp.asarray(r, jnp.float32), _EPS)
     rho = jnp.asarray(rho, jnp.float32)[:, None]
     a_acc, b_acc = accuracy_ab
+    if dev_mask is None:
+        dev_mask = jnp.ones((f.shape[-1],), jnp.float32)
+    real = (jnp.asarray(dev_mask, jnp.float32) > 0.0)[None, :]  # (1, N)
 
     cd = (c * d)[None, :]                      # (1, N)
     tau = D[None, :] / r                       # FL upload delay
@@ -31,17 +35,20 @@ def objective_grid(
     e_t = p * tau
     e_c = xi * eta * cd * jnp.square(f)
     e_sc = p * rho * C[None, :] / r
-    t_fl = jnp.max(tau + t_c, axis=-1)         # (G,)
+    # padded rows (dev_mask 0, `pad_params`) must not leak into any device
+    # reduction: select, don't multiply (masked multiply turns inf into nan)
+    e_dev = jnp.where(real, e_t + e_c + e_sc, 0.0)
+    t_fl = jnp.max(jnp.where(real, tau + t_c, -jnp.inf), axis=-1)   # (G,)
     acc = a_acc * jnp.power(jnp.maximum(rho[:, 0], 1e-9), b_acc)
-    N = f.shape[-1]
+    n_dev = jnp.sum(jnp.asarray(dev_mask, jnp.float32))             # real count
 
     obj = (
-        kappa1 * jnp.sum(e_t + e_c + e_sc, axis=-1)
+        kappa1 * jnp.sum(e_dev, axis=-1)
         + kappa2 * t_fl
-        - kappa3 * N * acc
+        - kappa3 * n_dev * acc
     )
     t_sc = rho * C[None, :] / r
-    bad = jnp.any(t_sc > t_sc_max[None, :], axis=-1) | jnp.any(
-        f > f_max[None, :] * (1 + 1e-6), axis=-1
+    bad = jnp.any((t_sc > t_sc_max[None, :]) & real, axis=-1) | jnp.any(
+        (f > f_max[None, :] * (1 + 1e-6)) & real, axis=-1
     )
     return jnp.where(bad, jnp.inf, obj)

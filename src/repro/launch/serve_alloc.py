@@ -32,6 +32,7 @@ def build_config(args) -> ServeConfig:
         policy=BatchPolicy(max_batch=args.max_batch, max_wait_s=args.max_wait_ms / 1e3),
         buckets=None if args.policy == "exact" else DEFAULT_BUCKETS,
         allocator=allocator,
+        shard_batch=args.shard,
     )
 
 
@@ -45,6 +46,13 @@ def main() -> None:
     ap.add_argument("--inner", choices=("pgd", "sca", "auto"), default="pgd")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true", help="tiny allocator + stream")
+    ap.add_argument(
+        "--shard",
+        action="store_true",
+        help="shard each flush over all local devices (scenario mesh); "
+        "--max-batch becomes the per-device batch. Combine with "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=8 to try it on CPU",
+    )
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(args.seed)
@@ -54,6 +62,11 @@ def main() -> None:
     arrivals = poisson_arrivals(jax.random.fold_in(key, 1), n, args.rate)
 
     service = AllocService(build_config(args))
+    if service.mesh is not None:
+        print(
+            f"scenario mesh: {service.mesh.size} device(s), "
+            f"{service.cfg.policy.max_batch} slots each"
+        )
     print(f"warming compiled-solver cache for {len(set(sizes))} shapes ...")
     service.warmup(requests)
     result = run_load(service, requests, arrivals)

@@ -3,10 +3,12 @@
 Heterogeneous `SystemParams` requests are padded into canonical `ShapeBucket`s
 (`pad_params` masks keep padding inert), queued per bucket, and flushed
 through ONE AOT-compiled `solve_batch` executable per (bucket, batch-slots,
-`AllocatorConfig`). The batch axis is padded to a fixed number of slots by
-replicating the last request, so each bucket compiles exactly once no matter
-how full its flushes run — the compiled-executable cache is the whole point:
-steady-state serving never re-traces.
+`AllocatorConfig`, mesh). The batch axis is padded to a fixed number of slots
+by replicating the last request, so each bucket compiles exactly once no
+matter how full its flushes run — the compiled-executable cache is the whole
+point: steady-state serving never re-traces. With ``shard_batch`` the slots
+grow to ``device_count x max_batch`` and each flush runs one scenario-sharded
+executable over all local devices (`core.distribute`).
 
 The service is sans-IO: callers pass ``now`` timestamps and decide when to
 flush (`flush_full` after submits, `flush_due` on timer ticks, `drain` at
@@ -29,12 +31,17 @@ from repro.core import (
     Weights,
     bucket_for,
     pad_params,
-    solve_batch,
+    scenario_mesh,
+    scenario_sharding,
+    sharded_batch_solver,
     stack_params,
     stack_weights,
     tree_index,
     unpad_alloc,
 )
+from repro.core.accuracy import default_accuracy
+from repro.core.allocator import _solve_batch_jit
+from repro.core.distribute import replicated
 from repro.core.types import DEFAULT_BUCKETS, ShapeBucket
 
 from .batching import BatchPolicy, MicroBatcher, PendingRequest
@@ -50,6 +57,11 @@ class ServeConfig(NamedTuple):
     #: pad the batch axis to ``policy.max_batch`` slots so each bucket
     #: compiles once; False recompiles per observed batch size
     pad_batch: bool = True
+    #: shard the batch axis over a scenario mesh of all local devices
+    #: (`core.distribute`): bucket slots grow to ``device_count x max_batch``
+    #: (``policy.max_batch`` becomes the per-device batch) and each flush runs
+    #: one sharded executable with no cross-device communication
+    shard_batch: bool = False
 
 
 def _round_sig(x: float, digits: int = 12) -> float:
@@ -90,28 +102,40 @@ class AllocService:
         another service with the SAME ServeConfig (e.g. a warmed instance in a
         benchmark sweep); the dict is used and extended in place."""
         self.cfg = cfg
-        self.batcher = MicroBatcher(cfg.policy)
+        # with shard_batch, policy.max_batch is the PER-DEVICE batch: buckets
+        # fill (and pad) to device_count x max_batch slots, so each device in
+        # the sharded executable solves a max_batch-sized sub-batch
+        self.mesh = scenario_mesh() if cfg.shard_batch else None
+        n_dev = self.mesh.size if self.mesh is not None else 1
+        self._full_slots = cfg.policy.max_batch * n_dev
+        self.batcher = MicroBatcher(cfg.policy._replace(max_batch=self._full_slots))
         self.metrics = ServiceMetrics()
         self._executables = executables if executables is not None else {}
+        self._acc = default_accuracy()
         self._next_id = 0
 
     @property
     def executables(self) -> dict[tuple, object]:
         """The compiled-solver cache, keyed by (bucket key, batch slots,
-        AllocatorConfig) — pass to another AllocService to skip its compiles;
-        a service with a different allocator config safely misses and compiles
-        its own entries."""
+        AllocatorConfig, mesh) — pass to another AllocService to skip its
+        compiles; a service with a different allocator config or sharding
+        (``shard_batch``, so mesh None vs a scenario mesh) safely misses and
+        compiles its own entries."""
         return self._executables
 
     # -- admission ----------------------------------------------------------
 
     def _pad(self, params: SystemParams) -> SystemParams:
+        # canonicalise B at the service boundary — in BOTH bucket modes — so
+        # equal-bbar requests that reconstructed B through different float
+        # round-trips land in one queue (see `_round_sig`). Exact-shape mode
+        # used to skip this: two requests whose B differed by an ulp got equal
+        # shapes but different bucket keys, and even with equal keys
+        # `stack_params` would reject mixing them (regression-tested).
+        # The core `pad_params` itself stays bit-exact on bbar.
         if self.cfg.buckets is None:
-            return params
+            return dataclasses.replace(params, B=_round_sig(params.B))
         padded = pad_params(params, bucket_for(params.N, params.K, self.cfg.buckets))
-        # canonicalise B at the service boundary so equal-bbar requests of
-        # different original K stack into one queue (see `_round_sig`);
-        # the core `pad_params` itself stays bit-exact on bbar
         return dataclasses.replace(padded, B=_round_sig(padded.B))
 
     @staticmethod
@@ -149,19 +173,49 @@ class AllocService:
 
     # -- the compiled-solver cache ------------------------------------------
 
+    def _slots(self, n_real: int) -> int:
+        """Batch-axis slots for a flush of ``n_real`` requests.
+
+        ``pad_batch``: fixed at ``device_count x max_batch`` so each bucket
+        compiles once. Otherwise slots follow the observed size, rounded up to
+        the device count when sharding (the mesh needs a divisible axis).
+        """
+        if self.cfg.pad_batch:
+            return self._full_slots
+        if self.mesh is not None:
+            n_dev = self.mesh.size
+            return -(-n_real // n_dev) * n_dev
+        return n_real
+
+    def _place(self, params_batch, weights_batch):
+        """Commit a flush's inputs to the mesh (scenario-sharded batch axis,
+        replicated accuracy fit) so AOT executables see the shardings they
+        were compiled for. No-op placement cost on a single device."""
+        if self.mesh is None:
+            return params_batch, weights_batch, self._acc
+        scen = scenario_sharding(self.mesh)
+        return (
+            jax.device_put(params_batch, scen),
+            jax.device_put(weights_batch, scen),
+            jax.device_put(self._acc, replicated(self.mesh)),
+        )
+
     def _solver(self, key: tuple, slots: int, params_batch, weights_batch):
-        # AllocatorConfig is part of the key: a shared `executables` dict must
-        # never hand config A's solver to a service running config B
-        cache_key = (key, slots, self.cfg.allocator)
+        # AllocatorConfig AND the mesh are part of the key: a shared
+        # `executables` dict must never hand config A's solver to a service
+        # running config B, nor a single-device program to a sharded service
+        cache_key = (key, slots, self.cfg.allocator, self.mesh)
         exe = self._executables.get(cache_key)
         if exe is None:
             cfg = self.cfg.allocator
-            t0 = time.perf_counter()
-            exe = (
-                jax.jit(lambda pb, wb: solve_batch(pb, wb, cfg, weights_batched=True))
-                .lower(params_batch, weights_batch)
-                .compile()
+            jitted = (
+                _solve_batch_jit
+                if self.mesh is None
+                else sharded_batch_solver(self.mesh, True)
             )
+            pb, wb, acc = self._place(params_batch, weights_batch)
+            t0 = time.perf_counter()
+            exe = jitted.lower(pb, wb, acc, cfg, True).compile()
             self._executables[cache_key] = exe
             self.metrics.observe_cache(hit=False, compile_s=time.perf_counter() - t0)
         else:
@@ -182,7 +236,7 @@ class AllocService:
         for p in example_params:
             padded = self._pad(p)
             seen.setdefault(self._bucket_key(padded), padded)
-        slots = self.cfg.policy.max_batch if self.cfg.pad_batch else 1
+        slots = self._slots(1)
         for key, padded in seen.items():
             pb = stack_params([padded] * slots)
             wb = stack_weights([Weights.ones()] * slots)
@@ -193,15 +247,16 @@ class AllocService:
     def _flush_bucket(self, key: tuple, now: float) -> tuple[list[Completion], float]:
         pending = self.batcher.pop(key)
         n_real = len(pending)
-        slots = self.cfg.policy.max_batch if self.cfg.pad_batch else n_real
+        slots = self._slots(n_real)
         # pad the batch axis by replicating the last request: same shape ->
         # same executable; replicas are solved and discarded
         filled = pending + [pending[-1]] * (slots - n_real)
         pb = stack_params([r.padded for r in filled])
         wb = stack_weights([r.weights for r in filled])
         exe = self._solver(key, slots, pb, wb)
+        pb, wb, acc = self._place(pb, wb)
         t0 = time.perf_counter()
-        res = jax.block_until_ready(exe(pb, wb))
+        res = jax.block_until_ready(exe(pb, wb, acc))
         solve_s = time.perf_counter() - t0
         self.metrics.observe_batch(n_real, slots, solve_s)
 

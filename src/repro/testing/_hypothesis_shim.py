@@ -121,10 +121,16 @@ class HealthCheck:
 def install_hypothesis_fallback() -> None:
     """Register shim modules as `hypothesis` / `hypothesis.strategies`.
 
-    No-op if the real package is importable or a shim is already installed.
+    No-op if the real package is importable or a shim is already installed —
+    the real engine (with shrinking and an example database) must always win
+    when present, regardless of whether the caller imported it first.
     """
     if "hypothesis" in sys.modules:
         return
+    import importlib.util
+
+    if importlib.util.find_spec("hypothesis") is not None:
+        return  # real package installed but not yet imported: leave it be
     hyp = types.ModuleType("hypothesis")
     strat = types.ModuleType("hypothesis.strategies")
     for mod_fn in (integers, floats, booleans, sampled_from):

@@ -3,15 +3,18 @@
 4 host devices so the sharding/pjit tests can build miniature meshes.
 (Deliberately NOT 512 — that flag belongs exclusively to launch/dryrun.py per
 the build brief; smoke tests and benchmarks should see a realistic host.)
-Must run before the first jax import in the test process.
+Must run before the first jax import in the test process. An explicit
+``--xla_force_host_platform_device_count`` already present in XLA_FLAGS wins
+— CI's sharded-path step runs the suite under 8 virtual devices.
 """
 import os
 import pathlib
 import sys
 
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=4 " + os.environ.get("XLA_FLAGS", "")
-)
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=4 " + os.environ.get("XLA_FLAGS", "")
+    )
 
 # src-layout import without requiring PYTHONPATH (tier-1 sets it; bare pytest
 # runs and IDEs don't)

@@ -103,3 +103,17 @@ def test_topk_update_compression_bounds(seed):
     kept_min = float(jnp.min(jnp.abs(sp["w"][sp["w"] != 0]))) if nz else 0.0
     dropped_max = float(jnp.max(jnp.abs(jnp.where(sp["w"] == 0, u["w"], 0.0))))
     assert kept_min >= dropped_max - 1e-6
+
+
+def test_hypothesis_fallback_never_shadows_loaded_engine():
+    """conftest prefers the real hypothesis package and installs the shim only
+    when the import fails; the installer itself must also be a no-op when an
+    engine (real or shim) is already loaded or installed, so no call order can
+    shadow the real package (ROADMAP item: the shim has no shrinking)."""
+    import sys
+
+    from repro.testing import install_hypothesis_fallback
+
+    engine = sys.modules["hypothesis"]
+    install_hypothesis_fallback()
+    assert sys.modules["hypothesis"] is engine

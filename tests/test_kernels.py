@@ -145,7 +145,8 @@ def test_mamba_scan(B, S, di, N, dtype):
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("G,N", [(512, 4), (1024, 10), (700, 6)])
-def test_fedsem_objective_grid(G, N):
+@pytest.mark.parametrize("masked", [False, True], ids=["full", "masked"])
+def test_fedsem_objective_grid(G, N, masked):
     from repro.core import Weights, sample_params
     from repro.kernels.fedsem_objective import ops, ref
 
@@ -155,11 +156,67 @@ def test_fedsem_objective_grid(G, N):
     p = jax.random.uniform(ks[1], (G, N), minval=1e-3, maxval=0.1)
     r = jax.random.uniform(ks[2], (G, N), minval=1e5, maxval=3e7)
     rho = jax.random.uniform(ks[3], (G,), minval=0.05, maxval=1.0)
+    dev_mask = (
+        jnp.asarray([1.0] * (N - N // 2) + [0.0] * (N // 2)) if masked else None
+    )
     args = (f, p, r, rho, params.c, params.d, params.D, params.C,
             params.t_sc_max, params.f_max, float(params.xi), float(params.eta),
             1.0, 1.0, 1.0)
-    got = ops.objective_grid(*args, use_pallas=True, interpret=True)
-    want = ref.objective_grid(*args)
+    got = ops.objective_grid(*args, dev_mask=dev_mask, use_pallas=True, interpret=True)
+    want = ref.objective_grid(*args, dev_mask=dev_mask)
     np.testing.assert_allclose(
         np.asarray(got), np.asarray(want), atol=1e-3, rtol=1e-4
     )
+
+
+def test_fedsem_objective_grid_masked_matches_system_objective():
+    """Regression: the grid evaluator was mask-unaware — it scored accuracy
+    with the raw padded device count and ran feasibility checks over padded
+    rows, so the exhaustive/random-search baselines (which route through
+    `ops.objective_grid`) disagreed with the mask-aware `system.objective` on
+    any `pad_params`-padded scenario."""
+    from repro.core import Allocation, Weights, pad_params, sample_params
+    from repro.core.allocator import equal_start, harden_x
+    from repro.core.system import device_power, device_rate, objective
+    from repro.kernels.fedsem_objective import ops
+
+    p = sample_params(jax.random.PRNGKey(9), N=4, K=8)
+    pp = pad_params(p, 8, 16)
+    f, P, X = equal_start(pp)
+    X = harden_x(X, pp.N, pp.K, pp.dev_mask, pp.sc_mask)
+    rho = jnp.float32(0.7)
+    # padded rows carry garbage the masks must neutralise: candidate f above
+    # the padded f_max (= 1.0) used to trip the feasibility check to +inf
+    f = jnp.where(pp.dev_mask > 0, f, 2.0)
+    r = device_rate(pp, P, X)
+    p_n = device_power(P)
+    for use_pallas in (False, True):
+        got = ops.objective_grid(
+            f[None], p_n[None], r[None], rho[None],
+            pp.c, pp.d, pp.D, pp.C, pp.t_sc_max, pp.f_max,
+            float(pp.xi), float(pp.eta), 1.0, 1.0, 1.0,
+            dev_mask=pp.dev_mask, use_pallas=use_pallas, interpret=use_pallas,
+        )
+        want = objective(pp, Weights.ones(), Allocation(f=f, P=P, X=X, rho=rho))
+        assert np.isfinite(float(got[0])), "masked feasibility flagged padded row"
+        np.testing.assert_allclose(float(got[0]), float(want), rtol=1e-5)
+
+
+def test_exhaustive_padded_scores_like_exact():
+    """`solve_exhaustive` through the mask-aware grid on a padded scenario:
+    before the fix every candidate tripped the f > f_max check on the padded
+    row (padded f_max = 1.0) and scored accuracy with the padded device count,
+    so the search returned +inf / wrong values. Masked, the padded best is
+    finite and at least as good as the exact-shape best — the padded space is
+    a superset (a real subcarrier owned by a padded device == legally
+    unassigned, an option the exact owner-per-subcarrier enumeration lacks)."""
+    from repro.core import Weights, pad_params, sample_params
+    from repro.core.exhaustive import solve_exhaustive
+
+    p = sample_params(jax.random.PRNGKey(10), N=2, K=3)
+    pp = pad_params(p, 3, 4)
+    grids = (np.array([5e8, 1e9]), np.array([10.0, 17.0]), np.array([0.5, 1.0]))
+    exact = solve_exhaustive(p, Weights.ones(), *grids)
+    padded = solve_exhaustive(pp, Weights.ones(), *grids)
+    assert np.isfinite(float(padded.value))
+    assert float(padded.value) <= float(exact.value) + 1e-6

@@ -249,6 +249,29 @@ def test_same_bbar_different_k_share_bucket():
         assert bool(feasible(p, c.alloc))
 
 
+def test_exact_mode_canonicalises_b_ulp_split():
+    """Regression: exact-shape mode (``buckets=None``) skipped the B
+    canonicalisation, so two equal-bbar requests whose B was reconstructed
+    through different float round-trips (1 ulp apart) landed in different
+    queues — neither bucket ever filled, and had they shared a key,
+    `stack_params` would have rejected mixing them. Both modes now
+    canonicalise at `_pad`."""
+    bbar = 84457742.9673523       # bbar * 12 != sum([bbar] * 12): 1 ulp apart
+    b_mul, b_sum = bbar * 12, sum([bbar] * 12)
+    assert b_mul != b_sum
+    pa = sample_params(jax.random.PRNGKey(0), N=4, K=12, B=b_mul)
+    pb = sample_params(jax.random.PRNGKey(1), N=4, K=12, B=b_sum)
+    service = AllocService(SERVE_CFG._replace(buckets=None))
+    assert service._bucket_key(service._pad(pa)) == service._bucket_key(service._pad(pb))
+    service.submit(pa, now=0.0)
+    service.submit(pb, now=0.0)
+    done, _ = service.flush_full(now=0.0)    # max_batch=2: only fires co-queued
+    assert len(done) == 2
+    for c, p in zip(done, (pa, pb)):
+        assert c.alloc.P.shape == (4, 12)
+        assert bool(feasible(p, c.alloc))
+
+
 # ---------------------------------------------------------------------------
 # solve_batch weights validation (satellite)
 # ---------------------------------------------------------------------------
