@@ -4,6 +4,7 @@ from .allocator import (
     AllocatorConfig, AllocatorResult, sharded_batch_solver, solve, solve_batch,
 )
 from .channel import sample_params, sample_params_batch, sample_request_stream
+from .scoring import batch_objectives, candidate_objectives, scenario_objective
 from .distribute import (
     SCENARIO_AXIS, pad_batch, scenario_mesh, scenario_sharding, shard_batch,
     slice_batch,
@@ -19,6 +20,7 @@ __all__ = [
     "AllocatorConfig", "AllocatorResult", "solve", "solve_batch",
     "sharded_batch_solver",
     "sample_params", "sample_params_batch", "sample_request_stream",
+    "batch_objectives", "candidate_objectives", "scenario_objective",
     "Allocation", "SystemParams", "Weights", "dbm_to_watt",
     "stack_params", "stack_weights", "tree_index",
     "ShapeBucket", "DEFAULT_BUCKETS", "bucket_for", "pad_params", "unpad_alloc",

@@ -27,6 +27,7 @@ from .accuracy import AccuracyFn, default_accuracy
 from .p3 import solve_p3
 from .p5 import P5Config, r_min, solve_p5
 from .pgd import PGDConfig, power_given_x, solve_p4_pgd
+from .scoring import candidate_objectives, scenario_objective
 from .system import objective
 from .types import Allocation, SystemParams, Weights
 
@@ -37,6 +38,12 @@ class AllocatorConfig(NamedTuple):
                                    # "auto" (run both, keep the better)
     p5: P5Config = P5Config()
     pgd: PGDConfig = PGDConfig()
+    #: route objective scoring (multi-start selection, the per-iteration
+    #: trace) through the batched `kernels/fedsem_objective` evaluator:
+    #: Pallas on TPU, the kernel's fused jnp oracle elsewhere (`core.scoring`
+    #: auto-fallback, so CPU and sharded ``mesh=`` solves work unchanged).
+    #: False keeps the plain per-candidate `system.objective` path.
+    use_kernel_objective: bool = True
 
 
 @partial(
@@ -181,7 +188,11 @@ def solve(
     best kept.
 
     inner="auto" additionally races the paper-faithful SCA path against the
-    PGD cross-check solver and keeps the better allocation.
+    PGD cross-check solver and keeps the better allocation. With
+    ``cfg.use_kernel_objective`` (default) the multi-start selection and the
+    per-iteration trace score through the batched `kernels/fedsem_objective`
+    evaluator (`core.scoring`); scores agree with `system.objective` to
+    float32 round-off, so the hardened result is unchanged.
     """
     acc = accuracy or default_accuracy()
     inners = ("sca", "pgd") if cfg.inner == "auto" else (cfg.inner,)
@@ -195,7 +206,13 @@ def solve(
         for inner in inners
         for start in starts
     ]
-    objs = jnp.stack([objective(params, weights, r.alloc, acc) for r in results])
+    if cfg.use_kernel_objective:
+        # one fused batched-kernel call scores every start (G = #candidates);
+        # under solve_batch's vmap this batches further into (B, G)
+        cand = jax.tree.map(lambda *xs: jnp.stack(xs), *[r.alloc for r in results])
+        objs = candidate_objectives(params, weights, cand, acc)
+    else:
+        objs = jnp.stack([objective(params, weights, r.alloc, acc) for r in results])
     best = jnp.argmin(objs)
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *results)
     return jax.tree.map(lambda x: x[best], stacked)
@@ -250,7 +267,9 @@ def solve_batch(
 
     ``params_batch`` is a batch-stacked ``SystemParams`` (`stack_params` /
     `sample_params_batch`), ``g`` of shape (B, N, K). The full pipeline —
-    multi-start, the P3/P5/PGD inner solvers, rate-floor repair and
+    multi-start, the P3/P5/PGD inner solvers, rate-floor repair, objective
+    scoring (the batched `kernels/fedsem_objective` path when
+    ``cfg.use_kernel_objective``, see `core.scoring`) and
     `harden_x` — is vmapped, so the whole sweep is a single XLA program:
     tracing happens once per (shape, cfg), not once per scenario, and the
     per-scenario math batches into wide kernels. Returns an `AllocatorResult`
@@ -328,7 +347,12 @@ def _solve_from(
                 params, weights.kappa1, payload, rmin, P, X, cfg.pgd
             )
         P_new = repair_rate_floor(params, P_new, X_new, rmin)
-        s = objective(params, weights, Allocation(p3.f, P_new, X_new, p3.rho), acc)
+        cand = Allocation(p3.f, P_new, X_new, p3.rho)
+        s = (
+            scenario_objective(params, weights, cand, acc)
+            if cfg.use_kernel_objective
+            else objective(params, weights, cand, acc)
+        )
         return (p3.f, P_new, X_new), s
 
     (f, P, X), trace = jax.lax.scan(outer, (f, P, X), None, length=cfg.outer_iters)

@@ -6,8 +6,13 @@ a per-device (f, p, rho) grid. Per-device power is spread equally over the
 device's subcarriers (the paper's per-(n,k) grid at 1.5e10 points is not
 tractable on one CPU core; reductions documented in benchmarks/table2).
 
-The grid objective evaluation is the compute hot-spot; it runs through
-``repro.kernels.fedsem_objective`` (Pallas kernel with jnp fallback).
+The grid objective evaluation is the compute hot-spot; assignments are
+evaluated in *chunks* through the batched
+``repro.kernels.fedsem_objective`` evaluator (each chunk row = one subcarrier
+assignment on the kernel's scenario axis, its (f, p, rho) grid on the
+candidate axis), so the former one-jit-call-per-assignment python loop
+becomes a handful of fused (CHUNK, G) kernel launches — Pallas on TPU, the
+kernel's jnp oracle elsewhere.
 """
 from __future__ import annotations
 
@@ -21,17 +26,15 @@ import numpy as np
 from .system import subcarrier_rate
 from .types import Allocation, SystemParams, Weights, dbm_to_watt
 
+#: cap on CHUNK * G * N elements per batched evaluation (~8 MB fp32 tiles):
+#: bounds peak memory while keeping chunks wide enough to amortise dispatch
+_CHUNK_BUDGET = 2_000_000
+
 
 class ExhaustiveResult(NamedTuple):
     alloc: Allocation
     value: jnp.ndarray
     n_evaluated: int
-
-
-def _grid_eval_fn():
-    from repro.kernels.fedsem_objective import ops
-
-    return ops.objective_grid
 
 
 def solve_exhaustive(
@@ -41,10 +44,17 @@ def solve_exhaustive(
     p_levels_dbm: np.ndarray,
     rho_levels: np.ndarray,
     accuracy_ab=(0.6356, 0.4025),
+    chunk: int | None = None,
 ) -> ExhaustiveResult:
+    """Enumerate all N^K assignments; grid-sweep (f, p, rho) per assignment.
+
+    ``chunk`` overrides how many assignments ride one batched kernel call
+    (default: sized so a chunk's candidate tile stays ~a few MB).
+    """
+    from repro.kernels.fedsem_objective import ops
+
     N, K = params.N, params.K
     assert N**K <= 2_000_000, "exhaustive X enumeration too large"
-    objective_grid = _grid_eval_fn()
 
     f_levels = np.asarray(f_levels, np.float32)
     p_levels = np.asarray(dbm_to_watt(jnp.asarray(p_levels_dbm)), np.float32)
@@ -54,68 +64,101 @@ def solve_exhaustive(
     f_mesh = np.stack(
         np.meshgrid(*([f_levels] * N), indexing="ij"), -1
     ).reshape(-1, N)                                      # (Lf^N, N)
-    p_mesh = np.stack(
-        np.meshgrid(*([p_levels] * N), indexing="ij"), -1
+    p_idx = np.stack(
+        np.meshgrid(*([np.arange(len(p_levels))] * N), indexing="ij"), -1
     ).reshape(-1, N)                                      # (Lp^N, N)
+    p_mesh = p_levels[p_idx]                              # (Lp^N, N)
+
+    A_, B_, Lr = len(f_mesh), len(p_mesh), len(rho_levels)
+    G = A_ * B_ * Lr                                      # candidates / assignment
+    if chunk is None:
+        chunk = int(max(1, min(64, _CHUNK_BUDGET // max(G * N, 1))))
+
+    # candidate grid shared by every assignment (flat index g = (a, b, r)):
+    # f repeats over (p, rho), p tiles over f / repeats over rho, rho tiles
+    fs = jnp.repeat(jnp.asarray(f_mesh), B_ * Lr, axis=0)             # (G, N)
+    ps = jnp.tile(jnp.repeat(jnp.asarray(p_mesh), Lr, axis=0), (A_, 1))
+    rho_c = jnp.tile(jnp.asarray(rho_levels), A_ * B_)                # (G,)
+    p_idx_j = jnp.asarray(p_idx)
+    p_levels_j = jnp.asarray(p_levels)
 
     @jax.jit
-    def eval_assignment(owner):
-        """owner: (K,) int device per subcarrier -> (best value, argmin info)."""
-        X = jnp.zeros((N, K)).at[owner, jnp.arange(K)].set(1.0)
-        n_sc = jnp.maximum(jnp.sum(X, axis=-1), 1.0)      # (N,)
-        p_levels_j = jnp.asarray(p_levels)
-        # rate table: (Lp, N) — device rate when transmitting at level p total
-        P_tab = (p_levels_j[:, None, None] / n_sc[None, :, None]) * X[None]
-        r_tab = jnp.sum(X[None] * subcarrier_rate(params, P_tab), axis=-1)  # (Lp, N)
+    def eval_chunk(owners, fs, ps, rho_c):
+        """owners: (CH, K) int device per subcarrier; fs/ps (G, N) and rho_c
+        (G,) are the shared candidate grid (runtime args, NOT closure
+        constants — XLA would constant-fold the broadcast (CH, G, N)
+        feasibility compares at compile time, which stalls for seconds).
+        Returns per-assignment (best value, flat candidate argmin)."""
 
-        # broadcast candidates: G = Lf^N * Lp^N * Lr
-        fs = jnp.asarray(f_mesh)                           # (A, N)
-        p_idx = jnp.stack(
-            jnp.meshgrid(*([jnp.arange(len(p_levels))] * N), indexing="ij"), -1
-        ).reshape(-1, N)                                   # (B, N)
-        ps = p_levels_j[p_idx]                             # (B, N)
-        rs = r_tab[p_idx, jnp.arange(N)[None, :]]          # (B, N)
+        def rates(owner):
+            X = jnp.zeros((N, K)).at[owner, jnp.arange(K)].set(1.0)
+            n_sc = jnp.maximum(jnp.sum(X, axis=-1), 1.0)          # (N,)
+            # rate table: (Lp, N) — device rate at total power level p
+            P_tab = (p_levels_j[:, None, None] / n_sc[None, :, None]) * X[None]
+            r_tab = jnp.sum(X[None] * subcarrier_rate(params, P_tab), axis=-1)
+            return r_tab[p_idx_j, jnp.arange(N)[None, :]]          # (B_, N)
 
-        A_, B_ = fs.shape[0], ps.shape[0]
-        Lr = len(rho_levels)
-        f_c = jnp.repeat(fs, B_ * Lr, axis=0)
-        p_c = jnp.tile(jnp.repeat(ps, Lr, axis=0), (A_, 1))
-        r_c = jnp.tile(jnp.repeat(rs, Lr, axis=0), (A_, 1))
-        rho_c = jnp.tile(jnp.asarray(rho_levels), A_ * B_)
-
-        obj = objective_grid(
-            f_c, p_c, r_c, rho_c,
-            params.c, params.d, params.D, params.C,
-            params.t_sc_max, params.f_max,
-            float(params.xi), float(params.eta),
+        rs = jax.vmap(rates)(owners)                               # (CH, B_, N)
+        ch = owners.shape[0]
+        r_c = jnp.tile(jnp.repeat(rs, Lr, axis=1), (1, A_, 1))     # (CH, G, N)
+        row = lambda v: jnp.broadcast_to(v[None], (ch,) + v.shape)
+        obj = ops.objective_grid_batch(
+            row(fs), row(ps), r_c, jnp.broadcast_to(rho_c[None], (ch, G)),
+            row(params.c), row(params.d), row(params.D), row(params.C),
+            row(params.t_sc_max), row(params.f_max),
             float(weights.kappa1), float(weights.kappa2), float(weights.kappa3),
-            accuracy_ab,
-            # padded scenarios (`pad_params`) score like their exact-shape twin:
-            # real device count, masked reductions, masked feasibility
-            dev_mask=params.dev_mask,
-        )
-        best = jnp.argmin(obj)
-        return obj[best], f_c[best], p_c[best], rho_c[best]
+            xi=float(params.xi), eta=float(params.eta),
+            accuracy_ab=accuracy_ab,
+            # padded scenarios (`pad_params`) score like their exact-shape
+            # twin: real device count, masked reductions, masked feasibility
+            dev_mask=row(params.dev_mask),
+        )                                                          # (CH, G)
+        return jnp.min(obj, axis=-1), jnp.argmin(obj, axis=-1)
+
+    owners_np = np.fromiter(
+        itertools.chain.from_iterable(itertools.product(range(N), repeat=K)),
+        np.int32,
+    ).reshape(-1, K)                                               # (N^K, K)
+    m = len(owners_np)
+    m_pad = -(-m // chunk) * chunk
+    owners_pad = np.concatenate(
+        [owners_np, np.repeat(owners_np[-1:], m_pad - m, axis=0)]
+    )
 
     best_val = np.inf
-    best = None
-    n_eval = 0
-    per_x = len(f_mesh) * len(p_mesh) * len(rho_levels)
-    for owner_tuple in itertools.product(range(N), repeat=K):
-        owner = jnp.asarray(owner_tuple, jnp.int32)
-        val, f_c, p_c, rho_c = eval_assignment(owner)
-        n_eval += per_x
-        val = float(val)
-        if val < best_val:
-            best_val = val
-            best = (np.asarray(owner_tuple), np.asarray(f_c), np.asarray(p_c), float(rho_c))
+    best_owner_i = best_g = -1
+    for lo in range(0, m_pad, chunk):
+        vals, idxs = jax.block_until_ready(
+            eval_chunk(jnp.asarray(owners_pad[lo : lo + chunk]), fs, ps, rho_c)
+        )
+        vals = np.asarray(vals)
+        # padded tail rows replicate the last assignment: harmless duplicates,
+        # but keep them out of the argmin bookkeeping
+        valid = min(chunk, m - lo)
+        i = int(np.argmin(vals[:valid])) if valid > 0 else 0
+        if valid > 0 and vals[i] < best_val:
+            best_val = float(vals[i])
+            best_owner_i = lo + i
+            best_g = int(np.asarray(idxs)[i])
 
-    owner, f_c, p_c, rho_c = best
+    if best_owner_i < 0:
+        raise ValueError(
+            "solve_exhaustive: every candidate in the grid is infeasible "
+            "(all objectives +inf) — the SemCom deadline t_sc_max or f_max "
+            "cannot be met at any grid point; widen the f/p/rho levels"
+        )
+    owner = owners_np[best_owner_i]
+    f_c = f_mesh[best_g // (B_ * Lr)]
+    p_c = p_mesh[(best_g // Lr) % B_]
+    rho_best = float(rho_levels[best_g % Lr])
     X = np.zeros((N, K), np.float32)
     X[owner, np.arange(K)] = 1.0
     n_sc = np.maximum(X.sum(-1), 1.0)
     P = X * (p_c / n_sc)[:, None]
     alloc = Allocation(
-        f=jnp.asarray(f_c), P=jnp.asarray(P), X=jnp.asarray(X), rho=jnp.float32(rho_c)
+        f=jnp.asarray(f_c), P=jnp.asarray(P), X=jnp.asarray(X),
+        rho=jnp.float32(rho_best),
     )
-    return ExhaustiveResult(alloc=alloc, value=jnp.float32(best_val), n_evaluated=n_eval)
+    return ExhaustiveResult(
+        alloc=alloc, value=jnp.float32(best_val), n_evaluated=m * G
+    )

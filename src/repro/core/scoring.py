@@ -1,0 +1,128 @@
+"""Objective scoring routed through the batched `fedsem_objective` kernel.
+
+`system.objective` scores ONE allocation for ONE scenario with plain jnp.
+The hot paths score many at once — `solve`'s multi-start selection (G
+candidate allocations per scenario, vmapped over B scenarios by
+`solve_batch`), the serving layer's padded-bucket flushes (B scenarios, one
+allocation each), the exhaustive grid sweep — and this module fuses those
+evaluations into single calls of `repro.kernels.fedsem_objective.ops.
+objective_grid_batch` (Pallas on TPU, the kernel's jnp oracle elsewhere;
+``interpret=True`` runs the Pallas path on CPU for tests).
+
+Equivalence guarantee: with ``check_feasible=False`` (the default here) the
+kernel evaluates exactly eq. 13 — the same masked reductions as the
+mask-aware `system.objective` — so scores agree with it to float32
+round-off (a few ulps, from reduction/FMA ordering; asserted in
+`tests/test_kernels.py`). Padded scenarios (`pad_params`) score identically
+to their exact-shape twins: `dev_mask` excludes padded rows from the device
+count, every energy/delay reduction, and the feasibility checks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .accuracy import AccuracyFn, default_accuracy
+from .system import device_rate
+from .types import Allocation, SystemParams, Weights
+
+
+def candidate_objectives(
+    params: SystemParams,
+    weights: Weights,
+    allocs: Allocation,
+    accuracy: AccuracyFn | None = None,
+    *,
+    use_pallas: str | bool = "auto",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Score G candidate allocations for ONE scenario -> (G,) objectives.
+
+    ``allocs`` is an `Allocation` whose leaves carry a leading candidate axis
+    G (``f``: (G, N), ``P``/``X``: (G, N, K), ``rho``: (G,)). Rates are
+    derived per candidate (eq. 2) and the eq. 13 scores are fused into one
+    batched-kernel call with `system.objective` semantics (no feasibility
+    masking). vmap-safe: under `solve_batch`'s vmap the per-scenario B=1
+    Pallas call batches into an extra scenario grid dimension, so the whole
+    multi-start selection of a batch is still one kernel launch.
+    """
+    from repro.kernels.fedsem_objective import ops
+
+    acc = accuracy or default_accuracy()
+    r = jax.vmap(lambda P, X: device_rate(params, P, X))(allocs.P, allocs.X)
+    p_n = jnp.sum(allocs.P, axis=-1)                          # (G, N)
+    rho = jnp.reshape(allocs.rho, (-1,))                      # (G,)
+    obj = ops.objective_grid_batch(
+        allocs.f[None], p_n[None], r[None], rho[None],
+        params.c[None], params.d[None], params.D[None], params.C[None],
+        params.t_sc_max[None], params.f_max[None],
+        weights.kappa1, weights.kappa2, weights.kappa3,
+        xi=float(params.xi), eta=float(params.eta),
+        accuracy_ab=(acc.a, acc.b),
+        dev_mask=params.dev_mask[None],
+        check_feasible=False,
+        use_pallas=use_pallas,
+        interpret=interpret,
+    )
+    return obj[0]
+
+
+def scenario_objective(
+    params: SystemParams,
+    weights: Weights,
+    alloc: Allocation,
+    accuracy: AccuracyFn | None = None,
+    *,
+    use_pallas: str | bool = "auto",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """`system.objective` via the kernel path: one scenario, one allocation."""
+    one = jax.tree.map(lambda x: jnp.asarray(x)[None], alloc)
+    return candidate_objectives(
+        params, weights, one, accuracy,
+        use_pallas=use_pallas, interpret=interpret,
+    )[0]
+
+
+def batch_objectives(
+    params_batch: SystemParams,
+    weights: Weights,
+    allocs: Allocation,
+    accuracy: AccuracyFn | None = None,
+    *,
+    weights_batched: bool = False,
+    use_pallas: str | bool = "auto",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Score one allocation per scenario of a stacked batch -> (B,).
+
+    ``params_batch`` is batch-stacked (`stack_params`, ``g``: (B, N, K)) and
+    ``allocs`` carries matching leading-B leaves — e.g. the ``alloc`` of a
+    `solve_batch` result, or a serving flush's padded bucket batch. This is
+    the direct (un-vmapped) batched-kernel entry: the B scenarios land on the
+    kernel's scenario grid axis with G = 1 candidate each. ``weights`` is
+    broadcast unless ``weights_batched`` (leaves with a leading B axis).
+    """
+    from repro.kernels.fedsem_objective import ops
+
+    acc = accuracy or default_accuracy()
+    r = jax.vmap(device_rate)(params_batch, allocs.P, allocs.X)   # (B, N)
+    p_n = jnp.sum(allocs.P, axis=-1)                              # (B, N)
+    kap = (weights.kappa1, weights.kappa2, weights.kappa3)
+    if not weights_batched:
+        b = p_n.shape[0]
+        kap = tuple(jnp.broadcast_to(k, (b,)) for k in kap)
+    obj = ops.objective_grid_batch(
+        allocs.f[:, None, :], p_n[:, None, :], r[:, None, :],
+        jnp.reshape(allocs.rho, (-1, 1)),
+        params_batch.c, params_batch.d, params_batch.D, params_batch.C,
+        params_batch.t_sc_max, params_batch.f_max,
+        *kap,
+        xi=float(params_batch.xi), eta=float(params_batch.eta),
+        accuracy_ab=(acc.a, acc.b),
+        dev_mask=params_batch.dev_mask,
+        check_feasible=False,
+        use_pallas=use_pallas,
+        interpret=interpret,
+    )
+    return obj[:, 0]

@@ -185,7 +185,13 @@ class ShapeBucket(NamedTuple):
     """Canonical padded (N, K) shape: every scenario padded into the same
     bucket shares one compiled solver program (the serving layer's unit of
     batching). Buckets must satisfy K >= N (same constraint as the scenarios
-    they hold)."""
+    they hold).
+
+    Equivalence guarantee (asserted in `tests/test_serve_alloc.py`): solving
+    a `pad_params`-padded scenario yields the same hardened assignment as
+    solving the exact-shape scenario — padding affects shapes, never answers
+    (see `pad_params` for the mask/bandwidth invariants that make this hold).
+    """
 
     N: int
     K: int

@@ -1,8 +1,17 @@
-"""jit'd public wrapper for the FedSem objective grid.
+"""jit'd public wrappers for the FedSem objective grid.
 
-Dispatch: on TPU the Pallas kernel runs compiled; elsewhere we use the pure
+Dispatch: on TPU the Pallas kernels run compiled; elsewhere we use the pure
 jnp oracle (`ref.py`) — Pallas-in-interpret-mode is for correctness tests,
 not for the 1e8-candidate exhaustive sweeps on one CPU core.
+
+* `objective_grid` — one scenario, static float weights (exhaustive search).
+* `objective_grid_batch` — leading scenario axis B with runtime (traceable)
+  weights and accuracy coefficients. This is the entry the batched evaluation
+  paths use (`core.scoring` -> `solve_batch` multi-start selection, the
+  serving layer's padded-bucket flush scoring, the chunked exhaustive sweep).
+  It is vmap-compatible: mapping over a leading axis batches the Pallas call
+  into an extra grid dimension, so `solve_batch`'s vmapped per-scenario
+  scoring (a B=1 call per scenario) still compiles to one batched kernel.
 """
 from __future__ import annotations
 
@@ -61,3 +70,64 @@ def objective_grid(
         interpret=interpret,
     )
     return out[:G]
+
+
+def objective_grid_batch(
+    f, p, r, rho,
+    c, d, D, C, t_sc_max, f_max,
+    kappa1, kappa2, kappa3,
+    *,
+    xi: float, eta: float,
+    accuracy_ab=(0.6356, 0.4025),
+    dev_mask=None,
+    check_feasible: bool = True,
+    use_pallas: str | bool = "auto",
+    interpret: bool = False,
+):
+    """Objective (eq. 13) for B scenarios x G candidates -> (B, G).
+
+    Shapes: ``f``/``p``/``r`` (B, G, N); ``rho`` (B, G); per-scenario
+    parameter vectors and ``dev_mask`` (B, N). ``kappa1..3`` and
+    ``accuracy_ab`` are runtime values — python floats, scalar arrays, or
+    (B,) arrays for per-scenario weights — so the call traces under jit with
+    `Weights` leaves (unlike `objective_grid`, whose weights are static).
+
+    ``check_feasible=False`` skips the infeasible -> +inf masking and returns
+    the raw eq. 13 score (`system.objective` semantics, used by the
+    allocator's multi-start selection). The candidate axis is padded to a
+    lane-aligned tile internally; ``xi``/``eta`` stay static (they are
+    `SystemParams` meta, identical across any stacked batch).
+    """
+    if use_pallas == "auto":
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return ref.objective_grid_batch(
+            f, p, r, rho, c, d, D, C, t_sc_max, f_max,
+            kappa1, kappa2, kappa3,
+            xi=xi, eta=eta, accuracy_ab=accuracy_ab, dev_mask=dev_mask,
+            check_feasible=check_feasible,
+        )
+
+    B, G, N = jnp.shape(f)
+    if dev_mask is None:
+        dev_mask = jnp.ones((B, N), jnp.float32)
+    # small candidate grids (multi-start scoring: G = #starts) only need one
+    # lane-width tile; big grids (exhaustive) keep the full 4x128 block
+    block_g = min(kernel.BLOCK_G, -(-G // kernel.LANE) * kernel.LANE)
+    g_pad = -(-G // block_g) * block_g
+    f_t = jnp.swapaxes(_pad_to(jnp.asarray(f, jnp.float32), g_pad, axis=1), 1, 2)
+    p_t = jnp.swapaxes(_pad_to(jnp.asarray(p, jnp.float32), g_pad, axis=1), 1, 2)
+    r_t = jnp.swapaxes(
+        _pad_to(jnp.asarray(r, jnp.float32), g_pad, axis=1, fill=1.0), 1, 2
+    )
+    rho_p = _pad_to(jnp.asarray(rho, jnp.float32), g_pad, axis=1, fill=1.0)
+    a_acc, b_acc = accuracy_ab
+    out = kernel.objective_batch_pallas(
+        f_t, p_t, r_t, rho_p, c, d, D, C, t_sc_max, f_max, dev_mask,
+        kappa1, kappa2, kappa3, a_acc, b_acc,
+        xi=float(xi), eta=float(eta),
+        check_feasible=check_feasible,
+        interpret=interpret,
+        block_g=block_g,
+    )
+    return out[:, :G]

@@ -3,13 +3,97 @@
 Evaluates P1's objective (eq. 13) for G candidate allocations at once:
   f (G,N) CPU freq, p (G,N) per-device total power, r (G,N) device rate,
   rho (G,) compression rate. Infeasible candidates (SemCom deadline or f_max
-  violations) evaluate to +inf.
+  violations) evaluate to +inf when ``check_feasible`` is set.
+
+`objective_grid_batch` adds a leading scenario axis B (the serving layer's
+padded-bucket batches, `solve_batch`'s multi-start scoring): f/p/r (B, G, N),
+rho (B, G), per-scenario parameter vectors (B, N), and *runtime* objective
+weights / accuracy coefficients — scalars or (B,) arrays — so it is traceable
+with per-scenario `Weights` under jit/vmap (the per-scenario `objective_grid`
+keeps its static-float weights for the exhaustive-search path).
+
+Every formula here is written exactly as the Pallas kernel computes it
+(`a * exp(b * log(rho))` rather than `rho ** b`, select-not-multiply masking),
+so kernel-vs-ref parity is exact in interpret mode, not merely close.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 _EPS = 1e-12
+
+
+def objective_grid_batch(
+    f, p, r, rho,
+    c, d, D, C, t_sc_max, f_max,
+    kappa1, kappa2, kappa3,
+    *,
+    xi: float, eta: float,
+    accuracy_ab=(0.6356, 0.4025),
+    dev_mask=None,
+    check_feasible: bool = True,
+):
+    """Objective (eq. 13) for B scenarios x G candidates -> (B, G).
+
+    Shapes: ``f``/``p``/``r`` (B, G, N); ``rho`` (B, G); ``c``/``d``/``D``/
+    ``C``/``t_sc_max``/``f_max``/``dev_mask`` (B, N). ``kappa1..3`` and the
+    ``accuracy_ab`` coefficients may be python floats, scalar arrays, or (B,)
+    arrays (per-scenario weights); they are runtime values, never static.
+
+    ``dev_mask`` rows mark real devices per scenario (`pad_params` contract):
+    padded rows are excluded from the device count, the energy/delay
+    reductions and the feasibility checks, so a padded scenario scores
+    exactly like its exact-shape twin. ``check_feasible=False`` skips the
+    +inf masking and returns the raw eq. 13 value — the `system.objective`
+    semantics the allocator's multi-start selection needs.
+    """
+    f = jnp.asarray(f, jnp.float32)
+    p = jnp.asarray(p, jnp.float32)
+    r = jnp.maximum(jnp.asarray(r, jnp.float32), _EPS)
+    rho = jnp.asarray(rho, jnp.float32)[..., None]            # (B, G, 1)
+    a_acc, b_acc = accuracy_ab
+    if dev_mask is None:
+        dev_mask = jnp.ones(f.shape[:1] + f.shape[-1:], jnp.float32)
+    mask = jnp.asarray(dev_mask, jnp.float32)[:, None, :]      # (B, 1, N)
+    real = mask > 0.0
+
+    def col(v):  # (B,) / scalar -> (B, 1) broadcastable over candidates
+        return jnp.asarray(v, jnp.float32).reshape(-1, 1)
+
+    cd = (jnp.asarray(c, jnp.float32) * jnp.asarray(d, jnp.float32))[:, None, :]
+    D2 = jnp.asarray(D, jnp.float32)[:, None, :]
+    C2 = jnp.asarray(C, jnp.float32)[:, None, :]
+
+    tau = D2 / r                                               # FL upload delay
+    t_c = eta * cd / jnp.maximum(f, _EPS)
+    e_t = p * tau
+    e_c = xi * eta * cd * (f * f)
+    e_sc = p * rho * C2 / r
+    # padded rows (dev_mask 0, `pad_params`) must not leak into any device
+    # reduction: select, don't multiply (masked multiply turns inf into nan)
+    e_dev = jnp.where(real, e_t + e_c + e_sc, 0.0)
+    t_fl = jnp.max(jnp.where(real, tau + t_c, -jnp.inf), axis=-1)       # (B, G)
+    acc = jnp.asarray(a_acc, jnp.float32).reshape(-1, 1) * jnp.exp(
+        jnp.asarray(b_acc, jnp.float32).reshape(-1, 1)
+        * jnp.log(jnp.maximum(rho[..., 0], 1e-9))
+    )
+    n_dev = jnp.sum(mask[:, 0, :], axis=-1, keepdims=True)     # (B, 1) real count
+
+    obj = (
+        col(kappa1) * jnp.sum(e_dev, axis=-1)
+        + col(kappa2) * t_fl
+        - col(kappa3) * n_dev * acc
+    )
+    if not check_feasible:
+        return obj
+    t_sc = rho * C2 / r
+    bad = jnp.any(
+        (t_sc > jnp.asarray(t_sc_max, jnp.float32)[:, None, :]) & real, axis=-1
+    ) | jnp.any(
+        (f > jnp.asarray(f_max, jnp.float32)[:, None, :] * (1.0 + 1e-6)) & real,
+        axis=-1,
+    )
+    return jnp.where(bad, jnp.inf, obj)
 
 
 def objective_grid(
@@ -19,36 +103,19 @@ def objective_grid(
     kappa1: float, kappa2: float, kappa3: float,
     accuracy_ab=(0.6356, 0.4025),
     dev_mask=None,
+    check_feasible: bool = True,
 ):
-    f = jnp.asarray(f, jnp.float32)
-    p = jnp.asarray(p, jnp.float32)
-    r = jnp.maximum(jnp.asarray(r, jnp.float32), _EPS)
-    rho = jnp.asarray(rho, jnp.float32)[:, None]
-    a_acc, b_acc = accuracy_ab
+    """Single-scenario view of `objective_grid_batch`: f/p/r (G, N), rho (G,)."""
     if dev_mask is None:
-        dev_mask = jnp.ones((f.shape[-1],), jnp.float32)
-    real = (jnp.asarray(dev_mask, jnp.float32) > 0.0)[None, :]  # (1, N)
-
-    cd = (c * d)[None, :]                      # (1, N)
-    tau = D[None, :] / r                       # FL upload delay
-    t_c = eta * cd / jnp.maximum(f, _EPS)
-    e_t = p * tau
-    e_c = xi * eta * cd * jnp.square(f)
-    e_sc = p * rho * C[None, :] / r
-    # padded rows (dev_mask 0, `pad_params`) must not leak into any device
-    # reduction: select, don't multiply (masked multiply turns inf into nan)
-    e_dev = jnp.where(real, e_t + e_c + e_sc, 0.0)
-    t_fl = jnp.max(jnp.where(real, tau + t_c, -jnp.inf), axis=-1)   # (G,)
-    acc = a_acc * jnp.power(jnp.maximum(rho[:, 0], 1e-9), b_acc)
-    n_dev = jnp.sum(jnp.asarray(dev_mask, jnp.float32))             # real count
-
-    obj = (
-        kappa1 * jnp.sum(e_dev, axis=-1)
-        + kappa2 * t_fl
-        - kappa3 * n_dev * acc
-    )
-    t_sc = rho * C[None, :] / r
-    bad = jnp.any((t_sc > t_sc_max[None, :]) & real, axis=-1) | jnp.any(
-        (f > f_max[None, :] * (1 + 1e-6)) & real, axis=-1
-    )
-    return jnp.where(bad, jnp.inf, obj)
+        dev_mask = jnp.ones((jnp.shape(f)[-1],), jnp.float32)
+    return objective_grid_batch(
+        jnp.asarray(f)[None], jnp.asarray(p)[None], jnp.asarray(r)[None],
+        jnp.asarray(rho)[None],
+        jnp.asarray(c)[None], jnp.asarray(d)[None], jnp.asarray(D)[None],
+        jnp.asarray(C)[None], jnp.asarray(t_sc_max)[None],
+        jnp.asarray(f_max)[None],
+        kappa1, kappa2, kappa3,
+        xi=xi, eta=eta, accuracy_ab=accuracy_ab,
+        dev_mask=jnp.asarray(dev_mask)[None],
+        check_feasible=check_feasible,
+    )[0]

@@ -3,8 +3,16 @@
 The pipeline is  request -> `pad_params` into a `ShapeBucket` -> per-bucket
 admission queue (`MicroBatcher`) -> one AOT-compiled `solve_batch` executable
 per (bucket, batch-slots, AllocatorConfig) -> hardened exact-shape
-`Allocation` back to the caller, with p50/p95 latency, queue-depth and
-batch-occupancy metrics along the way.
+`Allocation` back to the caller (scored through the batched
+`kernels/fedsem_objective` evaluator, `Completion.objective`), with p50/p95
+latency, queue-depth and batch-occupancy metrics along the way.
+
+Layer-wide equivalence contract: padding (shape buckets), co-batching
+(micro-batches), sharding (`shard_batch`) and the kernel objective path are
+all *transparent* — each request's hardened allocation and objective match a
+solo exact-shape `solve` to float32 round-off, asserted respectively in
+`tests/test_serve_alloc.py`, `tests/test_distribute.py` and
+`tests/test_kernels.py`.
 """
 from .batching import BatchPolicy, MicroBatcher, PendingRequest
 from .loadgen import LoadResult, poisson_arrivals, run_load

@@ -37,7 +37,16 @@ class PendingRequest:
 
 
 class MicroBatcher:
-    """Per-bucket FIFO queues with the max-batch / max-wait flush policy."""
+    """Per-bucket FIFO queues with the max-batch / max-wait flush policy.
+
+    Guarantees: requests in one bucket are answered in submission order
+    (`pop` is FIFO and caps at ``max_batch``); a request only ever co-batches
+    with requests whose bucket key — padded shape AND scenario meta — is
+    identical, so batching cannot change any request's compiled program or
+    its answer (the `AllocService` equivalence contract). Time never comes
+    from a clock here: ``now`` is caller-supplied, so the real-clock driver
+    and the virtual-clock load generator exercise byte-identical policy.
+    """
 
     def __init__(self, policy: BatchPolicy):
         self.policy = policy

@@ -10,6 +10,17 @@ point: steady-state serving never re-traces. With ``shard_batch`` the slots
 grow to ``device_count x max_batch`` and each flush runs one scenario-sharded
 executable over all local devices (`core.distribute`).
 
+Equivalence guarantees this layer asserts (tests/test_serve_alloc.py):
+a padded-bucket solve returns the *same hardened assignment* as the
+exact-shape solve of the submitted scenario, with objective drift at float32
+round-off; batch-axis padding replicates the tail request, whose replicas are
+solved and discarded, so co-batching never changes any caller's answer.
+Each flushed bucket batch is also *scored* through the batched
+`kernels/fedsem_objective` evaluator (`core.scoring.batch_objectives`) in one
+fused call over the padded batch — `Completion.objective` reports the
+eq. 13 value of the returned allocation, equal to `system.objective` on the
+exact-shape scenario to float32 round-off.
+
 The service is sans-IO: callers pass ``now`` timestamps and decide when to
 flush (`flush_full` after submits, `flush_due` on timer ticks, `drain` at
 shutdown), which makes it drivable by a real clock (`repro.launch.serve_alloc`)
@@ -18,11 +29,13 @@ or a virtual one (`repro.serve.loadgen`, benchmarks).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 import time
 from typing import NamedTuple
 
 import jax
+import numpy as np
 
 from repro.core import (
     Allocation,
@@ -42,6 +55,7 @@ from repro.core import (
 from repro.core.accuracy import default_accuracy
 from repro.core.allocator import _solve_batch_jit
 from repro.core.distribute import replicated
+from repro.core.scoring import batch_objectives
 from repro.core.types import DEFAULT_BUCKETS, ShapeBucket
 
 from .batching import BatchPolicy, MicroBatcher, PendingRequest
@@ -62,6 +76,15 @@ class ServeConfig(NamedTuple):
     #: (``policy.max_batch`` becomes the per-device batch) and each flush runs
     #: one sharded executable with no cross-device communication
     shard_batch: bool = False
+    #: score every flushed bucket batch through the batched
+    #: `kernels/fedsem_objective` evaluator (one fused call per flush) and
+    #: report the eq. 13 value on each `Completion.objective`
+    score_objective: bool = True
+
+
+#: one fused batched-kernel scoring call per flush; jit-cached per bucket
+#: shape (a tiny program next to the solver executables)
+_score_flush = jax.jit(functools.partial(batch_objectives, weights_batched=True))
 
 
 def _round_sig(x: float, digits: int = 12) -> float:
@@ -88,6 +111,10 @@ class Completion(NamedTuple):
     latency_s: float    # arrival -> answer (queue wait + batched solve)
     wait_s: float       # arrival -> flush
     solve_s: float      # the batched solve this request rode in
+    #: eq. 13 objective of ``alloc``, scored on the padded bucket batch by the
+    #: batched kernel (== `system.objective` on the exact-shape scenario to
+    #: float32 round-off); None when ``ServeConfig.score_objective`` is off
+    objective: float | None = None
 
 
 class AllocService:
@@ -259,6 +286,13 @@ class AllocService:
         res = jax.block_until_ready(exe(pb, wb, acc))
         solve_s = time.perf_counter() - t0
         self.metrics.observe_batch(n_real, slots, solve_s)
+        # score the padded batch through the batched kernel in one fused call
+        # (outside solve_s: diagnostics, not solver latency)
+        objs = (
+            np.asarray(_score_flush(pb, wb, res.alloc, self._acc))
+            if self.cfg.score_objective
+            else None
+        )
 
         out = []
         for i, req in enumerate(pending):
@@ -276,6 +310,7 @@ class AllocService:
                     latency_s=latency,
                     wait_s=wait,
                     solve_s=solve_s,
+                    objective=float(objs[i]) if objs is not None else None,
                 )
             )
         return out, solve_s

@@ -202,6 +202,194 @@ def test_fedsem_objective_grid_masked_matches_system_objective():
         np.testing.assert_allclose(float(got[0]), float(want), rtol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# fedsem objective — batched-over-scenarios kernel (PR 4)
+# ---------------------------------------------------------------------------
+
+def _batch_grid_inputs(key, B, G, N, masked_rows=True):
+    """Random (B, G, N) candidate grids + per-scenario parameter rows."""
+    ks = jax.random.split(key, 9)
+    f = jax.random.uniform(ks[0], (B, G, N), minval=1e8, maxval=2e9)
+    p = jax.random.uniform(ks[1], (B, G, N), minval=1e-3, maxval=0.1)
+    r = jax.random.uniform(ks[2], (B, G, N), minval=1e5, maxval=3e7)
+    rho = jax.random.uniform(ks[3], (B, G), minval=0.05, maxval=1.0)
+    c = jax.random.uniform(ks[4], (B, N), minval=1e3, maxval=1e4)
+    d = jax.random.uniform(ks[5], (B, N), minval=1e5, maxval=1e6)
+    D = jax.random.uniform(ks[6], (B, N), minval=1e5, maxval=1e6)
+    C = jax.random.uniform(ks[7], (B, N), minval=1e5, maxval=1e6)
+    tsc = jnp.full((B, N), 0.5)
+    fmax = jnp.full((B, N), 2e9)
+    mask = (
+        (jax.random.uniform(ks[8], (B, N)) > 0.4).astype(jnp.float32)
+        .at[:, 0].set(1.0)                       # >= 1 real device per scenario
+        if masked_rows
+        else jnp.ones((B, N), jnp.float32)
+    )
+    return (f, p, r, rho, c, d, D, C, tsc, fmax), mask
+
+
+@pytest.mark.parametrize("B,G,N", [
+    (3, 700, 4),     # padded candidate axis (700 -> 768), per-row masks
+    (1, 6, 5),       # B=1 degenerate batch, tiny multi-start-sized G
+    (8, 1, 6),       # G=1: one allocation per scenario (the serving path)
+])
+@pytest.mark.parametrize("feasible_mask", [True, False], ids=["feas", "raw"])
+def test_fedsem_objective_batch_kernel_matches_ref(B, G, N, feasible_mask):
+    """Batched Pallas grid (interpret) vs the batched jnp oracle, per-scenario
+    dev_mask rows and per-scenario runtime weights. The infeasibility mask
+    must agree exactly; finite scores to a couple of float32 ulps (the kernel
+    is jit-compiled, the oracle eager — XLA's FMA/reduction codegen differs
+    at that level between the two layouts)."""
+    from repro.kernels.fedsem_objective import ops, ref
+
+    args, mask = _batch_grid_inputs(jax.random.PRNGKey(11), B, G, N)
+    kap = (jnp.linspace(0.5, 2.0, B), jnp.ones((B,)), jnp.full((B,), 1.3))
+    kw = dict(xi=1e-28, eta=10, accuracy_ab=(0.6356, 0.4025), dev_mask=mask,
+              check_feasible=feasible_mask)
+    got = np.asarray(ops.objective_grid_batch(
+        *args, *kap, use_pallas=True, interpret=True, **kw
+    ))
+    want = np.asarray(ref.objective_grid_batch(*args, *kap, **kw))
+    assert got.shape == (B, G)
+    np.testing.assert_array_equal(np.isinf(got), np.isinf(want))
+    finite = np.isfinite(want)
+    np.testing.assert_allclose(got[finite], want[finite], rtol=5e-7, atol=1e-5)
+
+
+def test_fedsem_objective_batch_ref_equals_per_scenario_ref():
+    """The batched oracle is exactly B stacked single-scenario oracles."""
+    from repro.kernels.fedsem_objective import ref
+
+    B, G, N = 4, 33, 5
+    args, mask = _batch_grid_inputs(jax.random.PRNGKey(12), B, G, N)
+    f, p, r, rho, c, d, D, C, tsc, fmax = args
+    kap = np.linspace(0.7, 1.4, B)
+    batch = ref.objective_grid_batch(
+        *args, kap, 1.0, 1.0, xi=1e-28, eta=10, dev_mask=mask
+    )
+    for b in range(B):
+        one = ref.objective_grid(
+            f[b], p[b], r[b], rho[b], c[b], d[b], D[b], C[b], tsc[b], fmax[b],
+            1e-28, 10, float(kap[b]), 1.0, 1.0, dev_mask=mask[b],
+        )
+        np.testing.assert_array_equal(np.asarray(batch[b]), np.asarray(one))
+
+
+@pytest.mark.parametrize("use_pallas", [False, True], ids=["jnp", "pallas"])
+def test_scoring_matches_system_objective_across_padded_buckets(use_pallas):
+    """`core.scoring` (the allocator/serving scoring path) == mask-aware
+    `system.objective`, scenario by scenario, on a padded-bucket batch with
+    per-scenario weights — the kernel==ref==system three-way parity the
+    batched objective path rests on."""
+    from repro.core import (
+        Weights, pad_params, sample_params, stack_params, stack_weights,
+    )
+    from repro.core.allocator import equal_start, harden_x
+    from repro.core.scoring import batch_objectives
+    from repro.core.system import objective
+    from repro.core.types import Allocation
+
+    scenarios, allocs, weights = [], [], []
+    bbar = 20e6 / 8                      # shared so the padded B meta matches
+    for i, (n, k) in enumerate([(3, 7), (4, 8), (2, 5), (4, 8)]):
+        p = sample_params(jax.random.PRNGKey(20 + i), N=n, K=k, B=bbar * k)
+        pp = pad_params(p, 4, 8)
+        f, P, X = equal_start(pp)
+        X = harden_x(X, pp.N, pp.K, pp.dev_mask, pp.sc_mask)
+        # padded rows carry garbage the masks must neutralise
+        f = jnp.where(pp.dev_mask > 0, f, 2.0)
+        scenarios.append(pp)
+        allocs.append(Allocation(f=f, P=P, X=X, rho=jnp.float32(0.4 + 0.1 * i)))
+        weights.append(Weights(jnp.float32(0.5 + i), jnp.float32(1.0),
+                               jnp.float32(1.5)))
+
+    pb = stack_params(scenarios)
+    ab = jax.tree.map(lambda *xs: jnp.stack(xs), *allocs)
+    wb = stack_weights(weights)
+    got = batch_objectives(
+        pb, wb, ab, weights_batched=True,
+        use_pallas=use_pallas, interpret=use_pallas,
+    )
+    for i, (pp, alloc, w) in enumerate(zip(scenarios, allocs, weights)):
+        want = float(objective(pp, w, alloc))
+        np.testing.assert_allclose(float(got[i]), want, rtol=1e-5)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True], ids=["jnp", "pallas"])
+def test_candidate_scoring_matches_system_objective(use_pallas):
+    """Per-scenario multi-start scoring (`candidate_objectives`) matches a
+    python loop of `system.objective` calls — including under vmap, which is
+    exactly how `solve_batch` reaches the batched kernel."""
+    from repro.core import Weights, sample_params
+    from repro.core.allocator import equal_start, low_power_start
+    from repro.core.scoring import candidate_objectives
+    from repro.core.system import objective
+    from repro.core.types import Allocation
+
+    p = sample_params(jax.random.PRNGKey(30), N=4, K=12)
+    w = Weights.ones()
+    cands = []
+    for start, rho in [(equal_start(p), 0.9), (low_power_start(p), 0.5)]:
+        f, P, X = start
+        cands.append(Allocation(f=f, P=P, X=X, rho=jnp.float32(rho)))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *cands)
+    got = candidate_objectives(
+        p, w, stacked, use_pallas=use_pallas, interpret=use_pallas
+    )
+    want = np.asarray([float(objective(p, w, a)) for a in cands])
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5)
+
+
+def test_solve_batch_kernel_objective_matches_jnp_objective():
+    """Regression for the default `use_kernel_objective` routing: scoring the
+    multi-start selection through the batched kernel path picks the identical
+    hardened X (and bitwise-identical alloc — selection is all it changes
+    post-hardening) as the plain `system.objective` path."""
+    from repro.core import AllocatorConfig, Weights, sample_params_batch, solve_batch
+
+    pb = sample_params_batch(jax.random.PRNGKey(40), 4, N=4, K=12)
+    w = Weights.ones()
+    on = solve_batch(pb, w, AllocatorConfig(inner="pgd"))
+    off = solve_batch(
+        pb, w, AllocatorConfig(inner="pgd", use_kernel_objective=False)
+    )
+    np.testing.assert_array_equal(np.asarray(on.alloc.X), np.asarray(off.alloc.X))
+    np.testing.assert_array_equal(np.asarray(on.alloc.P), np.asarray(off.alloc.P))
+    np.testing.assert_array_equal(
+        np.asarray(on.alloc.rho), np.asarray(off.alloc.rho)
+    )
+    # the trace IS scored differently (kernel vs jnp) — but only to fp noise
+    np.testing.assert_allclose(
+        np.asarray(on.trace), np.asarray(off.trace), rtol=1e-5
+    )
+
+
+def test_serve_completion_objective_scored_through_kernel():
+    """Serving flushes score their padded-bucket batch through the batched
+    kernel: `Completion.objective` == `system.objective` of the returned
+    exact-shape allocation."""
+    from repro.core import Weights, sample_params
+    from repro.core.system import objective
+    from repro.serve import AllocService, ServeConfig
+
+    svc = AllocService(ServeConfig())
+    reqs = [sample_params(jax.random.PRNGKey(50 + i), N=3 + i % 2, K=8)
+            for i in range(4)]
+    for i, p in enumerate(reqs):
+        svc.submit(p, now=0.01 * i)
+    done, _ = svc.drain(now=1.0)
+    assert len(done) == len(reqs)
+    for comp in done:
+        p = reqs[comp.req_id]
+        want = float(objective(p, Weights.ones(), comp.alloc))
+        np.testing.assert_allclose(comp.objective, want, rtol=1e-5)
+    # and the switch exists for latency-critical deployments
+    svc_off = AllocService(ServeConfig(score_objective=False))
+    svc_off.submit(reqs[0], now=0.0)
+    done_off, _ = svc_off.drain(now=1.0)
+    assert done_off[0].objective is None
+
+
 def test_exhaustive_padded_scores_like_exact():
     """`solve_exhaustive` through the mask-aware grid on a padded scenario:
     before the fix every candidate tripped the f > f_max check on the padded

@@ -1,0 +1,95 @@
+"""Docs sanity: README/ARCHITECTURE links resolve, README commands really run.
+
+Two checks, run by CI's docs step (`python tools/docs_check.py`):
+
+1. **Links** — every relative markdown link in `README.md` and
+   `docs/ARCHITECTURE.md` must point at an existing file/anchorable doc.
+2. **Commands** — every line in README's ```sh fenced blocks must be
+   *exercised*: either this script executes it directly (cheap commands on
+   the RUN_HERE list), or the command must appear verbatim (modulo extra
+   flags) in `.github/workflows/ci.yml`, i.e. another CI step runs it. A
+   README command that is neither runnable here nor present in CI fails the
+   build — quickstart instructions cannot rot silently.
+
+Illustrative snippets that should NOT be executed (long-running sweeps,
+accelerator-only commands) belong in ```text fences, which this script
+ignores.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DOCS = [ROOT / "README.md", ROOT / "docs" / "ARCHITECTURE.md"]
+CI_YML = ROOT / ".github" / "workflows" / "ci.yml"
+
+#: command prefixes this script executes itself (fast: < ~1 min on CI)
+RUN_HERE = (
+    "PYTHONPATH=src python examples/quickstart.py",
+)
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"^```sh\s*$(.*?)^```\s*$", re.M | re.S)
+
+
+def check_links(md: pathlib.Path) -> list[str]:
+    errors = []
+    for target in _LINK.findall(md.read_text()):
+        if target.startswith(("http://", "https://", "#", "mailto:")):
+            continue
+        path = (md.parent / target.split("#", 1)[0]).resolve()
+        if not path.exists():
+            errors.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+    return errors
+
+
+def _normalize(text: str) -> str:
+    return " ".join(text.split())
+
+
+def check_commands(readme: pathlib.Path) -> list[str]:
+    ci = _normalize(CI_YML.read_text())
+    errors = []
+    for block in _FENCE.findall(readme.read_text()):
+        for line in block.splitlines():
+            cmd = line.strip()
+            if not cmd or cmd.startswith("#"):
+                continue
+            if cmd.startswith(RUN_HERE):
+                print(f"[docs-check] running: {cmd}", flush=True)
+                proc = subprocess.run(
+                    cmd, shell=True, cwd=ROOT, capture_output=True, text=True
+                )
+                if proc.returncode != 0:
+                    errors.append(
+                        f"README command failed ({proc.returncode}): {cmd}\n"
+                        f"{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}"
+                    )
+            elif _normalize(cmd) not in ci:
+                errors.append(
+                    "README ```sh command neither on the docs-check RUN_HERE "
+                    f"list nor present in ci.yml (so nothing runs it): {cmd}"
+                )
+    return errors
+
+
+def main() -> int:
+    errors = []
+    for md in DOCS:
+        if not md.exists():
+            errors.append(f"missing doc: {md.relative_to(ROOT)}")
+            continue
+        errors.extend(check_links(md))
+    errors.extend(check_commands(DOCS[0]))
+    for e in errors:
+        print(f"[docs-check] FAIL: {e}", file=sys.stderr)
+    if not errors:
+        print("[docs-check] OK: links resolve, README commands exercised")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
