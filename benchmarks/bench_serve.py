@@ -1,19 +1,32 @@
 """Serving load benchmark: micro-batched `AllocService` vs solve-per-request.
 
-Sweeps Poisson arrival rate x bucket policy over a mixed-size scenario
-stream:
+Three comparisons over a mixed-size scenario stream:
 
-  * ``service``     — shape-bucket ladder, micro-batching to ``max_batch=8``
-    slots, one AOT-compiled `solve_batch` executable per bucket;
-  * ``per_request`` — the baseline: exact shapes, batch of 1, i.e. a jitted
-    `solve` per request (what the seed's callers did).
+1. **Policy sweep** (virtual clock): Poisson arrival rate x bucket policy —
+   ``service`` (shape-bucket ladder, micro-batching to ``max_batch=8``) vs
+   ``per_request`` (exact shapes, batch of 1, the seed's baseline), plus a
+   sharded flavour when more than one device is visible.
+2. **Learned ladder** (virtual clock): the same service with a
+   `repro.serve.ladder` bucket ladder fit to the stream's (N, K) mix —
+   padded-area waste vs `DEFAULT_BUCKETS` is computed exactly from the shape
+   histogram, and a throughput row runs at the top arrival rate.
+3. **Async overlap** (REAL clock): the threaded `RealClockDriver` vs a
+   single-threaded synchronous loop over the same paced arrival schedule —
+   the async win is admission/padding overlapping device solves. The
+   driver's answers are also replayed through the virtual-clock loadgen and
+   must match hardened-X-exactly (the equivalence gate).
 
-Arrivals run on a virtual clock, solves charge measured wall time (see
+Virtual-clock runs charge solves at measured wall time (see
 `repro.serve.loadgen`), so throughput and p50/p95 latency are honest while
 the sweep stays laptop-sized. Writes ``BENCH_serve.json`` at the repo root
 (full run) so future PRs have a serving-perf trajectory; ``--smoke`` writes
 ``experiments/bench/BENCH_serve_smoke.json`` with a tiny allocator config for
 CI.
+
+Exit status gates ONLY the deterministic claims (every request answered,
+driver==loadgen equivalence, learned-ladder waste <= default): timing-ratio
+checks are recorded as informational ``perf_checks`` — a loaded CI box must
+not fail an unrelated PR (the bench_allocator convention).
 
   PYTHONPATH=src python -m benchmarks.bench_serve            # full, root JSON
   PYTHONPATH=src python -m benchmarks.bench_serve --smoke    # CI-sized
@@ -23,12 +36,25 @@ from __future__ import annotations
 import json
 import pathlib
 import platform
+import time
+from collections import Counter
 
 import jax
 
 from repro.core import AllocatorConfig, DEFAULT_BUCKETS, sample_request_stream
 from repro.core.pgd import PGDConfig
-from repro.serve import AllocService, BatchPolicy, ServeConfig, poisson_arrivals, run_load
+from repro.serve import (
+    AllocService,
+    BatchPolicy,
+    RealClockDriver,
+    ServeConfig,
+    learn_buckets,
+    pace_stream,
+    padded_area_waste,
+    poisson_arrivals,
+    run_load,
+    same_hardened_assignments,
+)
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 OUT_JSON = ROOT / "BENCH_serve.json"
@@ -40,7 +66,7 @@ MAX_BATCH = 8
 # heterogeneous but ladder-aligned: (4,12) pads into the (4,16) bucket (1.33x
 # area waste), the others hit their bucket exactly. Bucket-misaligned sizes
 # shift the trade toward the per-request baseline (padding waste eats the
-# batching win) — that regime is what the ladder's geometry exists to bound.
+# batching win) — that regime is what the learned ladder exists to close.
 SIZES = ((4, 12), (4, 16), (8, 16))
 
 
@@ -71,6 +97,80 @@ def _policies(allocator: AllocatorConfig, max_wait_s: float):
     return policies
 
 
+def _row(policy_name, rate, cfg, completed, makespan_s, busy_s, summary):
+    return {
+        "policy": policy_name,
+        "rate_rps": rate,
+        "max_batch": cfg.policy.max_batch,
+        "shard_batch": cfg.shard_batch,
+        "throughput_rps": completed / max(makespan_s, 1e-12),
+        "makespan_s": makespan_s,
+        "busy_s": busy_s,
+        **summary,
+    }
+
+
+def _run_virtual(policy_name, cfg, requests, arrivals, rate, executables, rows):
+    service = AllocService(cfg, executables=executables)
+    result = run_load(service, requests, arrivals)
+    rows.append(
+        _row(
+            policy_name, rate, cfg,
+            len(result.completions), result.makespan_s, result.busy_s,
+            result.summary,
+        )
+    )
+    return result
+
+
+def _drive_async(cfg, requests, schedule, executables):
+    """Paced real-clock stream through the threaded driver (solves overlap
+    admission: the solver thread runs while this thread pads and paces)."""
+    service = AllocService(cfg, executables=executables)
+    driver = RealClockDriver(service)
+    futures, t0 = pace_stream(driver, requests, schedule)
+    driver.close(timeout=600.0)
+    makespan = driver.now() - t0
+    busy = service.metrics.solves_s.total     # exact even past the cap
+    # read answers off the futures (authoritative for every request), not the
+    # bounded completion log — the equivalence gate must not depend on
+    # DriverConfig.completion_log vs n_real
+    done = [f.result(timeout=0.0) for f in futures]
+    return done, makespan, busy, service.metrics.summary()
+
+
+def _drive_sync(cfg, requests, schedule, executables):
+    """The no-overlap baseline: one thread paces arrivals AND solves, so a
+    running solve blocks admission (arrivals queue behind it in real time).
+    Deadline flushes still fire on time while idle — the only difference from
+    the async driver is the missing admission/solve overlap."""
+    service = AllocService(cfg, executables=executables)
+    completions = []
+    t0 = time.monotonic()
+    now = lambda: time.monotonic() - t0
+    i, n = 0, len(requests)
+    while i < n or service.pending() > 0:
+        deadline = service.next_deadline()
+        t_next = schedule[i] if i < n else None
+        wake = min(t for t in (deadline, t_next) if t is not None) if (
+            deadline is not None or t_next is not None
+        ) else None
+        if wake is not None and wake > now():
+            time.sleep(wake - now())
+        while i < n and schedule[i] <= now():
+            # stamp the TRUE arrival time (like the loadgen): a request that
+            # queued behind a solve must be charged that wait, and its
+            # max-wait deadline runs from when it arrived, not when the
+            # blocked loop got around to admitting it
+            service.submit(requests[i], now=schedule[i])
+            i += 1
+        done, _ = service.flush_due(now=now())
+        completions.extend(done)
+    makespan = now()
+    busy = service.metrics.solves_s.total
+    return completions, makespan, busy, service.metrics.summary()
+
+
 def run(quick: bool = False, seed: int = 0, smoke: bool | None = None):
     smoke = quick if smoke is None else smoke
     # the interesting regime is arrival rate >= 1/t_single: the per-request
@@ -79,34 +179,75 @@ def run(quick: bool = False, seed: int = 0, smoke: bool | None = None):
     if smoke:
         allocator = AllocatorConfig(inner="pgd", outer_iters=2, pgd=PGDConfig(steps=60))
         n_requests, rates, max_wait_s = 48, (400.0,), 0.02
+        n_real, real_rate = 16, 100.0
     else:
         allocator = AllocatorConfig(inner="pgd")
         n_requests, rates, max_wait_s = 64, (5.0, 20.0, 100.0, 400.0), 0.05
+        n_real, real_rate = 32, 50.0
 
     key = jax.random.PRNGKey(seed)
     requests = sample_request_stream(key, n_requests, sizes=SIZES)
 
     rows = []
-    for policy_name, cfg in _policies(allocator, max_wait_s).items():
+    policy_cfgs = _policies(allocator, max_wait_s)
+    service_execs = None
+    for policy_name, cfg in policy_cfgs.items():
         warm = AllocService(cfg)
         warm.warmup(requests)          # compile once, outside the timed runs
+        if policy_name == "service":
+            service_execs = warm.executables   # reused by the sections below
         for rate in rates:
             # fresh metrics per rate, shared compiled cache
-            service = AllocService(cfg, executables=warm.executables)
             arrivals = poisson_arrivals(jax.random.fold_in(key, 1), n_requests, rate)
-            result = run_load(service, requests, arrivals)
-            rows.append(
-                {
-                    "policy": policy_name,
-                    "rate_rps": rate,
-                    "max_batch": cfg.policy.max_batch,
-                    "shard_batch": cfg.shard_batch,
-                    "throughput_rps": result.throughput_rps,
-                    "makespan_s": result.makespan_s,
-                    "busy_s": result.busy_s,
-                    **result.summary,
-                }
+            _run_virtual(
+                policy_name, cfg, requests, arrivals, rate, warm.executables, rows
             )
+
+    # --- learned bucket ladder vs DEFAULT_BUCKETS (tentpole) ----------------
+    mix = Counter((p.N, p.K) for p in requests)
+    learned = learn_buckets(mix, max_buckets=len(DEFAULT_BUCKETS))
+    waste = {
+        "shape_mix": {f"{n}x{k}": c for (n, k), c in sorted(mix.items())},
+        "learned_buckets": [[b.N, b.K] for b in learned],
+        "waste_learned": padded_area_waste(mix, learned),
+        "waste_default": padded_area_waste(mix, DEFAULT_BUCKETS),
+    }
+    # share the sweep's executable cache: learned buckets that coincide with
+    # DEFAULT_BUCKETS entries cache-hit (keys pin bucket shape + meta +
+    # allocator, so differing buckets miss safely), only new shapes compile
+    cfg_learned = policy_cfgs["service"]._replace(buckets=learned)
+    warm = AllocService(cfg_learned, executables=service_execs)
+    warm.warmup(requests)
+    top_rate = max(rates)
+    arrivals = poisson_arrivals(jax.random.fold_in(key, 1), n_requests, top_rate)
+    _run_virtual(
+        "service_learned_ladder", cfg_learned, requests, arrivals, top_rate,
+        warm.executables, rows,
+    )
+
+    # --- async real-clock driver vs synchronous loop (tentpole) -------------
+    # same config as the swept "service" policy, so its warm cache covers
+    # every bucket here — no recompiles inside the real-clock sections
+    cfg_srv = policy_cfgs["service"]
+    schedule = [
+        float(t)
+        for t in poisson_arrivals(jax.random.fold_in(key, 2), n_real, real_rate)
+    ]
+    drv_done, mk, busy, summ = _drive_async(
+        cfg_srv, requests[:n_real], schedule, service_execs
+    )
+    rows.append(_row("driver_real_async", real_rate, cfg_srv, len(drv_done), mk, busy, summ))
+    sync_done, mk, busy, summ = _drive_sync(
+        cfg_srv, requests[:n_real], schedule, service_execs
+    )
+    rows.append(_row("driver_real_sync", real_rate, cfg_srv, len(sync_done), mk, busy, summ))
+    # equivalence gate: the real-clock driver must answer exactly like the
+    # virtual-clock loadgen on the same stream (same hardened X per request)
+    replay = _run_virtual(
+        "driver_virtual_replay", cfg_srv, requests[:n_real], schedule, real_rate,
+        service_execs, rows,
+    )
+    driver_equivalent = same_hardened_assignments(drv_done, replay.completions)
 
     def best(policy):
         return max(
@@ -114,16 +255,27 @@ def run(quick: bool = False, seed: int = 0, smoke: bool | None = None):
         )
 
     svc, base = best("service"), best("per_request")
+    # deterministic claims — these gate the exit status
     checks = {
-        "service_beats_per_request_throughput": svc["throughput_rps"]
-        > base["throughput_rps"],
-        "service_batches_fill_under_load": svc["mean_batch_size"] >= 2.0,
         "all_requests_answered": all(
             r["completed"] == r["requests"] for r in rows
         ),
         "tail_latency_recorded": all(
             r["latency_p95_s"] >= r["latency_p50_s"] > 0 for r in rows
         ),
+        "learned_ladder_waste_le_default": waste["waste_learned"]
+        <= waste["waste_default"] + 1e-12,
+        "driver_equivalent_to_virtual_loadgen": driver_equivalent,
+        "driver_drained_everything": len(drv_done) == n_real and len(sync_done) == n_real,
+    }
+    # timing-dependent observations — recorded, printed, NEVER gating (a busy
+    # 2-core CI box must not fail an unrelated PR on a throughput ratio)
+    perf_checks = {
+        "service_beats_per_request_throughput": svc["throughput_rps"]
+        > base["throughput_rps"],
+        "service_batches_fill_under_load": svc["mean_batch_size"] >= 2.0,
+        "async_overlap_not_slower": best("driver_real_async")["throughput_rps"]
+        >= 0.9 * best("driver_real_sync")["throughput_rps"],
     }
 
     result = {
@@ -133,7 +285,11 @@ def run(quick: bool = False, seed: int = 0, smoke: bool | None = None):
         "inner": allocator.inner,
         "smoke": smoke,
         "rows": rows,
+        "ladder": waste,
+        "real_driver": {"n_requests": n_real, "rate_rps": real_rate},
         "speedup_throughput": svc["throughput_rps"] / max(base["throughput_rps"], 1e-12),
+        "checks": checks,
+        "perf_checks": perf_checks,
         "backend": jax.default_backend(),
         "device_count": jax.device_count(),
         "jax_version": jax.__version__,
@@ -143,7 +299,7 @@ def run(quick: bool = False, seed: int = 0, smoke: bool | None = None):
     out = OUT_JSON_SMOKE if smoke else OUT_JSON
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(result, indent=2) + "\n")
-    return rows, checks
+    return rows, checks, perf_checks
 
 
 if __name__ == "__main__":
@@ -154,14 +310,15 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true", help="tiny CI-sized run")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    rows, checks = run(smoke=args.smoke, seed=args.seed)
+    rows, checks, perf_checks = run(smoke=args.smoke, seed=args.seed)
     for r in rows:
         print(
-            f"{r['policy']:>12} rate={r['rate_rps']:>6.1f}/s "
+            f"{r['policy']:>22} rate={r['rate_rps']:>6.1f}/s "
             f"thpt={r['throughput_rps']:7.2f}/s p50={r['latency_p50_s']*1e3:7.1f}ms "
             f"p95={r['latency_p95_s']*1e3:7.1f}ms occ={r['batch_occupancy_mean']:.2f}"
         )
-    print("checks:", checks)
-    # nonzero exit on a failed claim check so the CI smoke step gates serving
-    # performance, not just crashes
+    print("checks (gating):", checks)
+    print("perf checks (informational):", perf_checks)
+    # nonzero exit only on a failed DETERMINISTIC claim (equivalence /
+    # completeness / ladder waste) — timing ratios stay informational
     sys.exit(0 if all(v is not False for v in checks.values()) else 1)

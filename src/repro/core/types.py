@@ -196,11 +196,23 @@ class ShapeBucket(NamedTuple):
     N: int
     K: int
 
+    @property
+    def area(self) -> int:
+        """Padded problem area N*K — the cost proxy the serving layer's
+        bucket ladders minimise (solve time scales with the padded shape,
+        not the real one)."""
+        return self.N * self.K
+
+    def fits(self, n: int, k: int) -> bool:
+        """Whether an (n, k) scenario can pad into this bucket."""
+        return self.N >= n and self.K >= k
+
 
 #: Default bucket ladder for the serving layer: a coarse geometric grid so a
 #: handful of compiled programs covers everything from toy scenarios to the
 #: paper's (10, 50) and beyond. ~2x area steps keep worst-case padding waste
-#: bounded while keeping the executable cache small.
+#: bounded while keeping the executable cache small. `repro.serve.ladder`
+#: learns a replacement ladder fitted to an observed shape mix.
 DEFAULT_BUCKETS = (
     ShapeBucket(4, 8),
     ShapeBucket(4, 16),
@@ -214,13 +226,13 @@ DEFAULT_BUCKETS = (
 
 def bucket_for(n: int, k: int, buckets=DEFAULT_BUCKETS) -> ShapeBucket:
     """Smallest bucket (by padded area N*K) that fits an (n, k) scenario."""
-    fits = [b for b in buckets if b.N >= n and b.K >= k]
+    fits = [b for b in buckets if b.fits(n, k)]
     if not fits:
         raise ValueError(
             f"no bucket in {tuple(buckets)} fits a scenario with N={n}, K={k}; "
             "extend the bucket ladder"
         )
-    return min(fits, key=lambda b: (b.N * b.K, b.N))
+    return min(fits, key=lambda b: (b.area, b.N))
 
 
 def pad_params(params: SystemParams, n_pad: int, k_pad: int | None = None) -> SystemParams:

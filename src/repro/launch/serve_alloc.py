@@ -1,48 +1,123 @@
 """Scenario-allocation serving driver: Poisson load over `AllocService`.
 
   PYTHONPATH=src python -m repro.launch.serve_alloc --requests 32 --rate 20
-  PYTHONPATH=src python -m repro.launch.serve_alloc --smoke
+  PYTHONPATH=src python -m repro.launch.serve_alloc --driver real --ladder learned --smoke
 
 Generates a mixed-size scenario stream (shared per-subcarrier bandwidth so
-sizes co-batch in one `ShapeBucket`), warms the compiled-solver cache, drives
-the micro-batched service with Poisson arrivals on the virtual clock, and
-prints throughput plus p50/p95 latency, queue-depth and batch-occupancy
-stats. ``--policy exact --max-batch 1`` degenerates to the solve-per-request
-baseline the benchmark compares against.
+sizes co-batch in one `ShapeBucket`), warms the compiled-solver cache, and
+drives the micro-batched service two ways:
+
+  * ``--driver virtual`` (default) — the reproducible discrete-event
+    simulation: Poisson arrivals on a virtual clock, solves charged at
+    measured wall time (`repro.serve.loadgen`).
+  * ``--driver real``    — the threaded real-clock front-end
+    (`repro.serve.driver.RealClockDriver`): this process paces arrivals with
+    real sleeps and submits from the main thread while the solver thread
+    overlaps flushes; shutdown drains every queue. With ``--smoke`` the same
+    stream is then replayed through the virtual-clock loadgen and the
+    hardened assignments must match request-for-request (exit 1 otherwise) —
+    the CI gate on the driver's equivalence contract.
+
+``--ladder learned`` fits an autoscaling bucket ladder to the stream's
+observed (N, K) mix (`repro.serve.ladder`) instead of `DEFAULT_BUCKETS` and
+prints the predicted padded-area waste of both. ``--policy exact
+--max-batch 1`` degenerates to the solve-per-request baseline the serving
+benchmark compares against.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 
 import jax
 
 from repro.core import DEFAULT_BUCKETS, AllocatorConfig, sample_request_stream
 from repro.core.pgd import PGDConfig
 from repro.core.system import feasible
-from repro.serve import AllocService, BatchPolicy, ServeConfig, poisson_arrivals, run_load
+from repro.serve import (
+    AllocService,
+    BatchPolicy,
+    LadderLearner,
+    RealClockDriver,
+    ServeConfig,
+    pace_stream,
+    poisson_arrivals,
+    run_load,
+    same_hardened_assignments,
+)
 
 
-def build_config(args) -> ServeConfig:
+def build_config(args, buckets) -> ServeConfig:
     if args.smoke:
         allocator = AllocatorConfig(inner="pgd", outer_iters=2, pgd=PGDConfig(steps=60))
     else:
         allocator = AllocatorConfig(inner=args.inner)
     return ServeConfig(
         policy=BatchPolicy(max_batch=args.max_batch, max_wait_s=args.max_wait_ms / 1e3),
-        buckets=None if args.policy == "exact" else DEFAULT_BUCKETS,
+        buckets=buckets,
         allocator=allocator,
         shard_batch=args.shard,
     )
 
 
-def main() -> None:
+def fit_ladder(args, requests):
+    """Resolve the bucket ladder for this run (None = exact shapes)."""
+    if args.policy == "exact":
+        if args.ladder == "learned":
+            print("--policy exact serves exact shapes; --ladder learned ignored")
+        return None
+    if args.ladder == "fixed":
+        return DEFAULT_BUCKETS
+    learner = LadderLearner(min_samples=1)
+    for p in requests:
+        learner.observe(p.N, p.K)
+    snap = learner.refit()
+    print(
+        f"learned ladder from {snap.n_observed} shapes: "
+        f"{[(b.N, b.K) for b in snap.buckets]}\n"
+        f"predicted padded-area waste: learned {snap.waste:.3f} "
+        f"vs DEFAULT_BUCKETS {snap.baseline_waste:.3f}"
+    )
+    return snap.buckets
+
+
+def drive_real(service, requests, arrivals) -> tuple[list, float]:
+    """Pace the stream on the real clock through a `RealClockDriver`.
+
+    No `LadderLearner` is attached: when ``--ladder learned`` the ladder was
+    already fit on this same stream's shapes, and the driver observing them
+    again would double-weight the prefix in any later refit."""
+    driver = RealClockDriver(service)
+    futures, t_start = pace_stream(driver, requests, arrivals)
+    driver.close(timeout=300.0)
+    makespan = driver.now() - t_start
+    completions = [f.result(timeout=0.0) for f in futures]  # resolved by drain
+    return completions, makespan
+
+
+def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--rate", type=float, default=20.0, help="arrival rate [req/s]")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-wait-ms", type=float, default=50.0)
     ap.add_argument("--policy", choices=("ladder", "exact"), default="ladder")
+    ap.add_argument(
+        "--driver",
+        choices=("virtual", "real"),
+        default="virtual",
+        help="virtual: reproducible DES clock; real: threaded real-clock "
+        "driver with paced arrivals (and, under --smoke, a virtual-clock "
+        "equivalence replay that gates the exit status)",
+    )
+    ap.add_argument(
+        "--ladder",
+        choices=("fixed", "learned"),
+        default="fixed",
+        help="fixed: DEFAULT_BUCKETS; learned: fit the bucket ladder to the "
+        "stream's observed (N, K) mix before serving",
+    )
     ap.add_argument("--inner", choices=("pgd", "sca", "auto"), default="pgd")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true", help="tiny allocator + stream")
@@ -61,7 +136,9 @@ def main() -> None:
     requests = sample_request_stream(key, n, sizes=sizes)
     arrivals = poisson_arrivals(jax.random.fold_in(key, 1), n, args.rate)
 
-    service = AllocService(build_config(args))
+    buckets = fit_ladder(args, requests)
+    cfg = build_config(args, buckets)
+    service = AllocService(cfg)
     if service.mesh is not None:
         print(
             f"scenario mesh: {service.mesh.size} device(s), "
@@ -69,18 +146,43 @@ def main() -> None:
         )
     print(f"warming compiled-solver cache for {len(set(sizes))} shapes ...")
     service.warmup(requests)
-    result = run_load(service, requests, arrivals)
+
+    if args.driver == "real":
+        completions, makespan = drive_real(service, requests, arrivals)
+        summary = service.metrics.summary()
+        busy = service.metrics.solves_s.total     # exact even past the cap
+    else:
+        result = run_load(service, requests, arrivals)
+        completions, makespan, busy = result.completions, result.makespan_s, result.busy_s
+        summary = result.summary
 
     n_feas = sum(
-        bool(feasible(requests[c.req_id], c.alloc)) for c in result.completions
+        bool(feasible(requests[c.req_id], c.alloc)) for c in completions
     )
-    print(json.dumps(result.summary, indent=2))
+    print(json.dumps(summary, indent=2))
     print(
-        f"served {len(result.completions)}/{n} requests "
-        f"({n_feas} feasible) in {result.makespan_s:.3f}s virtual "
-        f"({result.busy_s:.3f}s solving) -> {result.throughput_rps:.1f} req/s"
+        f"served {len(completions)}/{n} requests "
+        f"({n_feas} feasible) in {makespan:.3f}s {args.driver} "
+        f"({busy:.3f}s solving) -> {len(completions) / max(makespan, 1e-9):.1f} req/s"
     )
+    ok = len(completions) == n and n_feas == n
+
+    if args.driver == "real" and args.smoke:
+        # equivalence gate: replay the same stream on the virtual clock (same
+        # config, shared executable cache) — the hardened assignment of every
+        # request must match the real-clock driver's answer exactly
+        replay = run_load(
+            AllocService(cfg, executables=service.executables), requests, arrivals
+        )
+        same = same_hardened_assignments(completions, replay.completions)
+        print(
+            f"real-vs-virtual equivalence (exact hardened X, "
+            f"{len(completions)} reqs): {same}"
+        )
+        ok = ok and same
+
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -7,21 +7,38 @@ per (bucket, batch-slots, AllocatorConfig) -> hardened exact-shape
 `kernels/fedsem_objective` evaluator, `Completion.objective`), with p50/p95
 latency, queue-depth and batch-occupancy metrics along the way.
 
+Two drivers sit on top of the sans-IO core: the virtual-clock load generator
+(`loadgen.run_load`, reproducible DES for tests/benchmarks) and the
+real-clock threaded `driver.RealClockDriver` (bounded admission queue,
+solver thread, deadline timer, graceful drain). `ladder.LadderLearner`
+learns an autoscaling `ShapeBucket` ladder from the observed shape mix.
+
 Layer-wide equivalence contract: padding (shape buckets), co-batching
-(micro-batches), sharding (`shard_batch`) and the kernel objective path are
-all *transparent* — each request's hardened allocation and objective match a
-solo exact-shape `solve` to float32 round-off, asserted respectively in
-`tests/test_serve_alloc.py`, `tests/test_distribute.py` and
-`tests/test_kernels.py`.
+(micro-batches), sharding (`shard_batch`), the kernel objective path and the
+real-clock driver are all *transparent* — each request's hardened allocation
+and objective match a solo exact-shape `solve` to float32 round-off,
+asserted respectively in `tests/test_serve_alloc.py`,
+`tests/test_distribute.py`, `tests/test_kernels.py` and
+`tests/test_serve_driver.py`.
 """
 from .batching import BatchPolicy, MicroBatcher, PendingRequest
+from .driver import (
+    AdmissionQueueFull, DriverClosed, DriverConfig, RealClockDriver,
+    pace_stream, same_hardened_assignments,
+)
+from .ladder import (
+    LadderLearner, LadderSnapshot, learn_buckets, padded_area_waste,
+)
 from .loadgen import LoadResult, poisson_arrivals, run_load
-from .metrics import ServiceMetrics, percentile
+from .metrics import Reservoir, ServiceMetrics, percentile
 from .service import AllocService, Completion, ServeConfig
 
 __all__ = [
     "AllocService", "Completion", "ServeConfig",
     "BatchPolicy", "MicroBatcher", "PendingRequest",
-    "ServiceMetrics", "percentile",
+    "ServiceMetrics", "Reservoir", "percentile",
     "LoadResult", "poisson_arrivals", "run_load",
+    "RealClockDriver", "DriverConfig", "AdmissionQueueFull", "DriverClosed",
+    "pace_stream", "same_hardened_assignments",
+    "LadderLearner", "LadderSnapshot", "learn_buckets", "padded_area_waste",
 ]

@@ -56,6 +56,11 @@ def run_load(
         raise ValueError(
             f"requests ({len(requests)}) and arrivals ({len(arrivals)}) differ"
         )
+    if weights is not None and len(weights) != len(requests):
+        # fail at admission, not with an IndexError mid-run
+        raise ValueError(
+            f"weights ({len(weights)}) and requests ({len(requests)}) differ"
+        )
     arrivals = [float(t) for t in arrivals]
     if any(b < a for a, b in zip(arrivals, arrivals[1:])):
         raise ValueError("arrivals must be non-decreasing")
@@ -65,17 +70,27 @@ def run_load(
     completions: list[Completion] = []
     i, n = 0, len(requests)
 
-    while i < n or service.pending() > 0:
-        # arrivals are physical events: everything with t_arr <= clock already
-        # happened (possibly while the server was busy solving) and must be in
-        # the queues before any flush decision at `clock`
-        while i < n and arrivals[i] <= clock:
+    def admit_through(t: float) -> int:
+        """Admit every arrival with t_arr <= t; returns the new stream index.
+
+        Arrivals are physical events: everything with t_arr <= clock already
+        happened (possibly while the server was busy solving) and must be in
+        the queues before any flush decision at `clock` — including arrivals
+        landing *exactly* on a bucket deadline (regression: the deadline
+        branch used to flush first, so a tied arrival missed its batch).
+        """
+        nonlocal i
+        while i < n and arrivals[i] <= t:
             service.submit(
                 requests[i],
                 weights[i] if weights is not None else None,
                 now=arrivals[i],
             )
             i += 1
+        return i
+
+    while i < n or service.pending() > 0:
+        admit_through(clock)
         # full buckets flush first — at saturation this is what fills batches
         done, busy = service.flush_full(now=clock)
         if not done:
@@ -83,6 +98,9 @@ def run_load(
             t_arr = arrivals[i] if i < n else None
             if deadline is not None and (t_arr is None or deadline <= t_arr):
                 clock = max(clock, deadline)
+                # an arrival tied with the deadline (t_arr == clock) belongs
+                # in the queues before the flush decision at `clock`
+                admit_through(clock)
                 done, busy = service.flush_due(now=clock)
             elif t_arr is not None:
                 clock = max(clock, t_arr)   # idle until the next arrival

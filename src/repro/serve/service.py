@@ -173,24 +173,50 @@ class AllocService:
             padded.xi, padded.eta, padded.q,
         )
 
+    def prepare(
+        self, params: SystemParams, weights: Weights | None = None
+    ) -> PendingRequest:
+        """Pad/canonicalise one scenario into its bucket WITHOUT touching any
+        queue state (``req_id``/``arrival_t`` are placeholders until `admit`).
+
+        This is the pure, stateless half of admission: the real-clock driver
+        runs it on the *caller's* thread, so the host-side padding work
+        overlaps the solver thread's device solves (which release the GIL)."""
+        return PendingRequest(
+            req_id=-1,
+            params=params,
+            padded=self._pad(params),
+            weights=weights if weights is not None else Weights.ones(),
+            arrival_t=0.0,
+        )
+
+    def admit(self, req: PendingRequest, now: float) -> int:
+        """Assign a request id and enqueue a `prepare`d request (arrival
+        stamped at ``now``). Cheap — a deque append — and, like every other
+        state mutation on this sans-IO service, must be called from a single
+        thread (the driver's solver thread)."""
+        req.req_id = self._next_id
+        self._next_id += 1
+        req.arrival_t = now
+        self.batcher.add(self._bucket_key(req.padded), req)
+        self.metrics.observe_submit(self.batcher.depth())
+        return req.req_id
+
     def submit(
         self, params: SystemParams, weights: Weights | None = None, now: float = 0.0
     ) -> int:
         """Admit one scenario; returns its request id. Does not solve — call
         `flush_full` / `flush_due` / `drain` to get completions."""
-        req_id = self._next_id
-        self._next_id += 1
-        padded = self._pad(params)
-        req = PendingRequest(
-            req_id=req_id,
-            params=params,
-            padded=padded,
-            weights=weights if weights is not None else Weights.ones(),
-            arrival_t=now,
-        )
-        self.batcher.add(self._bucket_key(padded), req)
-        self.metrics.observe_submit(self.batcher.depth())
-        return req_id
+        return self.admit(self.prepare(params, weights), now)
+
+    def set_buckets(self, buckets: tuple[ShapeBucket, ...] | None) -> None:
+        """Swap the bucket ladder (e.g. a learned `repro.serve.ladder` refit
+        between epochs). Safe mid-stream: already-queued requests keep the
+        bucket they were admitted into (their padded params and key travel
+        with them), only new admissions see the new ladder, and the
+        executable cache simply compiles entries for new buckets on first
+        flush (old entries stay valid)."""
+        self.cfg = self.cfg._replace(buckets=buckets)
 
     def pending(self) -> int:
         return self.batcher.depth()
@@ -249,7 +275,7 @@ class AllocService:
             self.metrics.observe_cache(hit=True)
         return exe
 
-    def warmup(self, example_params, now: float = 0.0) -> None:
+    def warmup(self, example_params) -> None:
         """Pre-compile executables for the buckets the given example scenarios
         land in (serving warm-up, so first requests don't pay compile time).
 

@@ -273,6 +273,112 @@ def test_exact_mode_canonicalises_b_ulp_split():
 
 
 # ---------------------------------------------------------------------------
+# serving-loop correctness regressions (PR 5 satellites)
+# ---------------------------------------------------------------------------
+
+
+def test_arrival_tied_with_deadline_joins_the_flush():
+    """Regression: the loadgen's deadline branch used to flush BEFORE
+    admitting an arrival with t_arr == deadline, violating the documented
+    invariant (everything with t_arr <= clock is queued before any flush
+    decision at clock). The tied arrival must ride the due flush's batch."""
+    p = sample_params(jax.random.PRNGKey(0), N=4, K=8)
+    service = AllocService(SERVE_CFG)    # max_batch=2, max_wait_s=0.01
+    service.warmup([p])
+    # second arrival lands EXACTLY on the first request's bucket deadline
+    result = run_load(service, [p, p], arrivals=[0.0, 0.01])
+    assert len(result.completions) == 2
+    # one batch of two: the tied arrival was admitted first, filling the
+    # bucket (pre-fix: two solo flushes, batches == 2, occupancy 0.5)
+    assert result.summary["batches"] == 1
+    assert result.summary["mean_batch_size"] == 2.0
+    waits = {c.req_id: c.wait_s for c in result.completions}
+    assert waits[0] == pytest.approx(0.01)   # waited out max_wait_s
+    assert waits[1] == pytest.approx(0.0)    # flushed on arrival
+
+
+def test_run_load_validates_weights_length():
+    """Regression: a short weights list used to IndexError mid-run; it must
+    fail at admission."""
+    p = sample_params(jax.random.PRNGKey(0), N=4, K=8)
+    service = AllocService(SERVE_CFG)
+    with pytest.raises(ValueError, match="weights \\(1\\)"):
+        run_load(service, [p, p], arrivals=[0.0, 0.0], weights=[Weights.ones()])
+
+
+def test_warmup_has_no_dead_now_param():
+    """Regression: warmup() accepted (and ignored) a ``now`` timestamp."""
+    import inspect
+
+    assert "now" not in inspect.signature(AllocService.warmup).parameters
+
+
+def test_metrics_reservoirs_are_bounded():
+    """Regression: ServiceMetrics grew unbounded python lists — a leak under
+    the indefinitely-running real-clock driver. Reservoirs cap retained
+    samples while count/mean/max stay exact."""
+    from repro.serve import Reservoir, ServiceMetrics
+
+    r = Reservoir(cap=64, seed=0)
+    for i in range(1000):
+        r.add(float(i))
+    assert len(r.sample) == 64              # bounded retention
+    assert r.count == len(r) == 1000        # exact count
+    assert r.mean() == pytest.approx(499.5)  # exact running mean
+    assert r.max() == 999.0                 # exact running max
+    assert 0.0 <= r.percentile(50.0) <= 999.0
+
+    # below the cap the reservoir is exact, including percentiles
+    small = Reservoir(cap=64)
+    for i in range(10):
+        small.add(float(i))
+    assert small.sample == [float(i) for i in range(10)]
+    assert small.percentile(100.0) == 9.0
+
+    m = ServiceMetrics()
+    for i in range(10_000):
+        m.observe_submit(depth=i)
+        m.observe_completion(latency_s=1.0, wait_s=0.5)
+    for reservoir in (m.queue_depth, m.latencies_s, m.waits_s):
+        assert len(reservoir.sample) <= reservoir.cap
+    s = m.summary()                          # schema unchanged, values sane
+    assert s["requests"] == s["completed"] == 10_000
+    assert s["queue_depth_max"] == 9_999 and isinstance(s["queue_depth_max"], int)
+    assert s["latency_p50_s"] == 1.0 and s["wait_p50_s"] == 0.5
+
+
+def test_service_prepare_admit_round_trip():
+    """The driver-facing split of submit(): prepare is pure (no queue state),
+    admit stamps id/arrival and enqueues — together == submit."""
+    p = sample_params(jax.random.PRNGKey(0), N=3, K=8)
+    service = AllocService(SERVE_CFG)
+    prepared = service.prepare(p)
+    assert service.pending() == 0            # prepare touched no queue
+    assert prepared.padded.N == 4 and prepared.padded.K == 8
+    rid = service.admit(prepared, now=1.5)
+    assert rid == 0 and service.pending() == 1
+    assert prepared.arrival_t == 1.5
+    assert service.next_deadline() == pytest.approx(1.5 + SERVE_CFG.policy.max_wait_s)
+
+
+def test_set_buckets_mid_stream_keeps_queued_requests():
+    """A ladder refit between admissions must not strand queued requests:
+    they flush in the bucket they were admitted into."""
+    from repro.serve import learn_buckets
+
+    p = sample_params(jax.random.PRNGKey(0), N=3, K=8)
+    service = AllocService(SERVE_CFG)
+    service.submit(p, now=0.0)               # padded into DEFAULT (4, 8)
+    service.set_buckets(learn_buckets({(3, 8): 1}))
+    service.submit(p, now=0.0)               # padded into learned (3, 8)
+    done, _ = service.drain(now=0.0)
+    assert sorted(c.bucket for c in done) == [(3, 8), (4, 8)]
+    for c in done:
+        assert c.alloc.P.shape == (3, 8)
+        assert bool(feasible(p, c.alloc))
+
+
+# ---------------------------------------------------------------------------
 # solve_batch weights validation (satellite)
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,320 @@
+"""Real-clock driver + learned ladder: equivalence, drain, backpressure.
+
+CI-safe on a 2-core box by construction: tiny allocator config, generous
+completion timeouts, and NO assertions on latency/throughput values — only
+on *what* was answered (exact hardened X, per the padded-solve tolerance
+contract), that shutdown drains everything, and that the bounded admission
+queue rejects/blocks instead of growing.
+"""
+import queue
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import AllocatorConfig, sample_params, sample_request_stream
+from repro.core.pgd import PGDConfig
+from repro.core.types import DEFAULT_BUCKETS, ShapeBucket
+from repro.serve import (
+    AdmissionQueueFull,
+    AllocService,
+    BatchPolicy,
+    DriverClosed,
+    DriverConfig,
+    LadderLearner,
+    RealClockDriver,
+    ServeConfig,
+    learn_buckets,
+    padded_area_waste,
+    run_load,
+)
+
+#: generous wall-clock allowance for one batched solve on a loaded CI box
+WAIT_S = 120.0
+TINY = AllocatorConfig(inner="pgd", outer_iters=2, pgd=PGDConfig(steps=40))
+CFG = ServeConfig(policy=BatchPolicy(max_batch=2, max_wait_s=0.01), allocator=TINY)
+
+
+def _stream(n=6, seed=7):
+    return sample_request_stream(jax.random.PRNGKey(seed), n, sizes=((3, 8), (4, 8)))
+
+
+# ---------------------------------------------------------------------------
+# equivalence: real-clock driver == virtual-clock loadgen
+# ---------------------------------------------------------------------------
+
+
+def test_driver_matches_virtual_loadgen_exact_x():
+    """Same stream => identical req_id -> hardened X mapping. Equivalence is
+    structural (both fronts drive the same sans-IO service single-threaded),
+    so X must agree EXACTLY even though real-clock batch boundaries differ."""
+    requests = _stream()
+    ref_service = AllocService(CFG)
+    ref_service.warmup(requests)
+    ref = run_load(ref_service, requests, [0.0] * len(requests))
+
+    service = AllocService(CFG, executables=ref_service.executables)
+    with RealClockDriver(service) as driver:
+        futures = [driver.submit(p) for p in requests]
+        done = [f.result(timeout=WAIT_S) for f in futures]
+
+    assert sorted(c.req_id for c in done) == list(range(len(requests)))
+    ref_x = {c.req_id: np.asarray(c.alloc.X) for c in ref.completions}
+    for c in done:
+        np.testing.assert_array_equal(np.asarray(c.alloc.X), ref_x[c.req_id])
+        # exact shapes back, like the virtual path
+        assert c.alloc.P.shape == (requests[c.req_id].N, requests[c.req_id].K)
+        np.testing.assert_allclose(
+            float(c.alloc.rho),
+            float({r.req_id: r for r in ref.completions}[c.req_id].alloc.rho),
+            rtol=5e-3,
+        )
+
+
+def test_driver_multithreaded_submitters_all_answered():
+    """Concurrent caller threads (the real serving shape): every submit gets
+    its own scenario's answer back (exact shape), none are lost."""
+    requests = _stream(8)
+    service = AllocService(CFG)
+    service.warmup(requests)
+    results: dict[int, object] = {}
+
+    def client(idx):
+        fut = driver.submit(requests[idx])
+        results[idx] = fut.result(timeout=WAIT_S)
+
+    with RealClockDriver(service) as driver:
+        threads = [threading.Thread(target=client, args=(i,)) for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=WAIT_S)
+    assert sorted(results) == list(range(8))
+    for i, c in results.items():
+        assert c.alloc.P.shape == (requests[i].N, requests[i].K)
+
+
+# ---------------------------------------------------------------------------
+# shutdown drains everything
+# ---------------------------------------------------------------------------
+
+
+def test_close_drains_pending_requests():
+    """Requests still waiting in never-full, never-due buckets must be
+    answered by the graceful drain, not dropped."""
+    requests = _stream(3)
+    # max_wait so large nothing goes due on its own; max_batch larger than
+    # the stream so nothing fills either — only drain can flush
+    cfg = CFG._replace(policy=BatchPolicy(max_batch=8, max_wait_s=1e6))
+    service = AllocService(cfg)
+    service.warmup(requests)
+    driver = RealClockDriver(service)
+    futures = [driver.submit(p) for p in requests]
+    driver.close(timeout=WAIT_S)
+    done = [f.result(timeout=0.0) for f in futures]    # resolved by the drain
+    assert sorted(c.req_id for c in done) == [0, 1, 2]
+    assert service.pending() == 0
+    assert len(driver.completions) == 3
+
+
+def test_solver_thread_error_fails_futures_and_close_raises():
+    """A crash in the solver thread must not strand callers: every in-flight
+    future fails with the error, and close() re-raises instead of reporting
+    a clean drain."""
+    service = AllocService(CFG)
+
+    def boom(now):
+        raise RuntimeError("synthetic flush failure")
+
+    service.flush_due = boom
+    driver = RealClockDriver(service)
+    fut = driver.submit(sample_params(jax.random.PRNGKey(0), N=4, K=8))
+    with pytest.raises(RuntimeError, match="synthetic flush failure"):
+        fut.result(timeout=WAIT_S)
+    with pytest.raises(RuntimeError, match="solver thread died"):
+        driver.close(timeout=WAIT_S)
+
+
+def test_completion_log_is_bounded():
+    """driver.completions is a rolling window (futures carry every answer),
+    so an indefinitely running driver cannot leak through its own log."""
+    requests = _stream(4)
+    service = AllocService(CFG)
+    service.warmup(requests)
+    with RealClockDriver(service, DriverConfig(completion_log=2)) as driver:
+        futures = [driver.submit(p) for p in requests]
+        done = [f.result(timeout=WAIT_S) for f in futures]
+    assert len(done) == 4                       # every answer delivered
+    assert len(driver.completions) == 2         # log keeps only the newest
+
+
+def test_close_is_idempotent_and_fences_submit():
+    service = AllocService(CFG)
+    driver = RealClockDriver(service)
+    driver.close(timeout=WAIT_S)
+    driver.close(timeout=WAIT_S)                        # second close: no-op
+    with pytest.raises(DriverClosed):
+        driver.submit(sample_params(jax.random.PRNGKey(0), N=4, K=8))
+
+
+# ---------------------------------------------------------------------------
+# backpressure: bounded admission queue
+# ---------------------------------------------------------------------------
+
+
+def test_backpressure_rejects_when_full():
+    """With the solver thread deliberately not running, the bounded queue
+    must raise AdmissionQueueFull instead of growing without bound."""
+    p = sample_params(jax.random.PRNGKey(0), N=4, K=8)
+    service = AllocService(CFG)
+    driver = RealClockDriver(
+        service, DriverConfig(queue_capacity=2, block=False), start=False
+    )
+    driver.submit(p)
+    driver.submit(p)
+    with pytest.raises(AdmissionQueueFull):
+        driver.submit(p)
+    # the queued-but-unsolved requests are still served by the inline drain
+    driver.close()
+    assert len(driver.completions) == 2
+
+
+def test_backpressure_block_times_out():
+    p = sample_params(jax.random.PRNGKey(0), N=4, K=8)
+    service = AllocService(CFG)
+    driver = RealClockDriver(
+        service,
+        DriverConfig(queue_capacity=1, block=True, submit_timeout_s=0.05),
+        start=False,
+    )
+    driver.submit(p)
+    with pytest.raises(AdmissionQueueFull):
+        driver.submit(p)                                # blocks 0.05s, then raises
+    driver.close()
+    assert len(driver.completions) == 1
+
+
+def test_backpressure_blocking_submit_resumes():
+    """A blocking submit parked on a full queue must complete once the
+    solver thread starts consuming (no timing asserts — just progress)."""
+    requests = _stream(3)
+    service = AllocService(CFG)
+    service.warmup(requests)
+    driver = RealClockDriver(
+        service, DriverConfig(queue_capacity=1, block=True), start=False
+    )
+    futures = [driver.submit(requests[0])]
+    unblocked = threading.Event()
+
+    def second():
+        futures.append(driver.submit(requests[1]))      # parks on the bound
+        unblocked.set()
+
+    t = threading.Thread(target=second)
+    t.start()
+    assert not unblocked.wait(timeout=0.1)              # genuinely blocked
+    driver.start()                                      # consumer unblocks it
+    assert unblocked.wait(timeout=WAIT_S)
+    t.join(timeout=WAIT_S)
+    driver.close(timeout=WAIT_S)
+    assert len(driver.completions) == 2
+
+
+# ---------------------------------------------------------------------------
+# learned ladder
+# ---------------------------------------------------------------------------
+
+
+def test_learn_buckets_zero_waste_within_budget():
+    """One bucket per distinct shape fits the budget -> exact fit, and never
+    worse than DEFAULT_BUCKETS on the same mix."""
+    mix = {(4, 12): 50, (4, 16): 30, (8, 16): 20}
+    ladder = learn_buckets(mix, max_buckets=4)
+    assert padded_area_waste(mix, ladder) == 0.0
+    assert set(ladder) == {ShapeBucket(4, 12), ShapeBucket(4, 16), ShapeBucket(8, 16)}
+    assert padded_area_waste(mix, ladder) <= padded_area_waste(mix, DEFAULT_BUCKETS)
+
+
+def test_learn_buckets_respects_budget_and_covers():
+    mix = {(2, 4): 10, (3, 9): 5, (4, 16): 2, (6, 24): 1, (8, 32): 1}
+    ladder = learn_buckets(mix, max_buckets=2)
+    assert len(ladder) <= 2
+    # every observed shape still fits some bucket (waste computable == covered)
+    w2 = padded_area_waste(mix, ladder)
+    assert np.isfinite(w2)
+    # a bigger budget can only help (greedy is monotone in the budget)
+    w4 = padded_area_waste(mix, learn_buckets(mix, max_buckets=4))
+    assert w4 <= w2
+
+
+def test_learn_buckets_weighs_counts():
+    """The hot shape gets an exact bucket before the cold one does."""
+    hot, cold = (4, 12), (7, 29)
+    ladder = learn_buckets({hot: 1000, cold: 1}, max_buckets=2)
+    assert ShapeBucket(*hot) in ladder
+    assert ShapeBucket(max(4, 7), max(12, 29)) in ladder   # the cover bucket
+
+
+def test_learn_buckets_validates():
+    with pytest.raises(ValueError, match="at least one"):
+        learn_buckets({})
+    with pytest.raises(ValueError, match="K >= N"):
+        learn_buckets({(8, 4): 1})
+    with pytest.raises(ValueError, match="max_buckets"):
+        learn_buckets({(4, 8): 1}, max_buckets=0)
+    with pytest.raises(ValueError, match="must_fit"):
+        # transposed must_fit would otherwise seed an invalid K < N bucket
+        learn_buckets({(2, 4): 5}, must_fit=[(8, 4)])
+
+
+def test_ladder_learner_refit_and_fallback():
+    learner = LadderLearner(min_samples=5)
+    learner.observe(4, 12, count=3)
+    snap = learner.refit()
+    assert snap.buckets == DEFAULT_BUCKETS                 # below min_samples
+    learner.observe(8, 16, count=4)
+    snap = learner.refit()
+    assert snap.n_observed == 7
+    assert snap.waste <= snap.baseline_waste
+    assert ShapeBucket(4, 12) in snap.buckets
+
+
+def test_ladder_learner_uncoverable_fallback_scores_inf():
+    """A mix the fallback ladder cannot even serve must score it inf, not
+    crash refit — out-of-ladder mixes are exactly what the learner is for."""
+    learner = LadderLearner(min_samples=1)
+    learner.observe(100, 400)          # beyond DEFAULT_BUCKETS' (64, 256)
+    snap = learner.refit()
+    assert snap.baseline_waste == float("inf")
+    assert snap.waste == 0.0
+    assert ShapeBucket(100, 400) in snap.buckets
+
+
+def test_driver_refit_swaps_ladder_mid_stream():
+    """refit() between epochs: new admissions pad into the learned ladder,
+    already-served answers are unaffected, and serving keeps working."""
+    requests = _stream(4)
+    service = AllocService(CFG)
+    service.warmup(requests)
+    learner = LadderLearner(min_samples=1)
+    with RealClockDriver(service, ladder=learner) as driver:
+        first = [driver.submit(p) for p in requests[:2]]
+        [f.result(timeout=WAIT_S) for f in first]
+        snap = driver.refit()
+        assert snap.buckets != DEFAULT_BUCKETS
+        assert service.cfg.buckets == snap.buckets
+        second = [driver.submit(p) for p in requests[2:]]
+        done = [f.result(timeout=WAIT_S) for f in second]
+    for f, p in zip(done, requests[2:]):
+        assert f.alloc.P.shape == (p.N, p.K)
+    # epoch-2 requests were padded by the learned ladder: their bucket is one
+    # of its shapes (the observed mix is (3,8)/(4,8) -> (4,8) is learnable)
+    assert all(c.bucket in {(b.N, b.K) for b in snap.buckets} for c in done)
+
+
+def test_driver_refit_requires_learner():
+    service = AllocService(CFG)
+    with RealClockDriver(service) as driver:
+        with pytest.raises(RuntimeError, match="LadderLearner"):
+            driver.refit()
