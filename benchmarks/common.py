@@ -9,17 +9,39 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    AllocatorConfig, SystemParams, Weights, sample_params, solve, solve_batch,
+    AllocatorConfig, SystemParams, Weights, solve, solve_batch,
     stack_params, stack_weights, tree_index,
 )
 from repro.core import baselines as B
 from repro.core.system import feasible, report
+from repro.scenarios import get_family
 
 OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "bench"
 
 
 def weights(k1=1.0, k2=1.0, k3=1.0) -> Weights:
     return Weights(jnp.float32(k1), jnp.float32(k2), jnp.float32(k3))
+
+
+def sample_scenario(key, *, scenario: str = "iid_rayleigh", **kwargs) -> SystemParams:
+    """One scenario draw from a registered family — every fig script's
+    single-draw entry point, so ``--scenario`` reaches all of them."""
+    return get_family(scenario).sample(key, **kwargs)
+
+
+def sample_sweep(
+    key, overrides: list[dict], *, scenario: str = "iid_rayleigh", **base_kwargs
+) -> list[SystemParams]:
+    """One draw per sweep point, all from the SAME key and family: only the
+    per-point ``overrides`` (e.g. ``{"p_max_dbm": 24.0}``) move between
+    points, so a sweep isolates the swept knob from channel randomness.
+
+    This replaces the per-figure copies of the same list-comprehension
+    (fig4's p_max sweep, fig6's workload sweep, ...); same-shape results
+    stack straight into `run_proposed_batch`.
+    """
+    fam = get_family(scenario)
+    return [fam.sample(key, **{**base_kwargs, **o}) for o in overrides]
 
 
 def timed(fn, *args, **kw):

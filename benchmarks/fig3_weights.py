@@ -9,14 +9,13 @@ from __future__ import annotations
 
 import jax
 
-from .common import run_proposed_weights_batch, weights, write_csv
-from repro.core import sample_params
+from .common import run_proposed_weights_batch, sample_scenario, weights, write_csv
 
 SWEEP = (0.25, 1.0, 4.0, 16.0)
 
 
-def run(quick: bool = True, seed: int = 0):
-    params = sample_params(jax.random.PRNGKey(seed))
+def run(quick: bool = True, seed: int = 0, scenario: str = "iid_rayleigh"):
+    params = sample_scenario(jax.random.PRNGKey(seed), scenario=scenario)
     sweep = SWEEP[1:3] if quick else SWEEP
     # the whole 3 x len(sweep) grid is ONE jitted solve_batch call with a
     # batched Weights axis (weights_batched=True) — one compile, wide kernels

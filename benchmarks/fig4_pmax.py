@@ -9,20 +9,21 @@ from __future__ import annotations
 
 import jax
 
-from .common import run_baselines, run_proposed_batch, weights, write_csv
-from repro.core import sample_params
+from .common import run_baselines, run_proposed_batch, sample_sweep, weights, write_csv
 
 PMAX_DBM = (12.0, 16.0, 20.0, 24.0)
 
 
-def run(quick: bool = True, seed: int = 0):
+def run(quick: bool = True, seed: int = 0, scenario: str = "iid_rayleigh"):
     w = weights()
     rows = []
     sweep = PMAX_DBM[1::2] if quick else PMAX_DBM
     # same key for every point: identical channels, only the power budget moves
-    params_list = [
-        sample_params(jax.random.PRNGKey(seed), p_max_dbm=pmax) for pmax in sweep
-    ]
+    params_list = sample_sweep(
+        jax.random.PRNGKey(seed),
+        [{"p_max_dbm": pmax} for pmax in sweep],
+        scenario=scenario,
+    )
     reps_sca = run_proposed_batch(params_list, w, inner="sca")
     reps_pgd = run_proposed_batch(params_list, w, inner="pgd")
     for pmax, params, rep, rep_pgd in zip(sweep, params_list, reps_sca, reps_pgd):

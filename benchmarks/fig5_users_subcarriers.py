@@ -13,21 +13,22 @@ from __future__ import annotations
 import jax
 
 from .common import run_proposed_batch, weights, write_csv
-from repro.core import sample_params_batch
+from repro.scenarios import get_family
 
 USERS = (4, 8, 16)
 SUBCARRIERS = (20, 40, 60)
 
 
-def run(quick: bool = True, seed: int = 0):
+def run(quick: bool = True, seed: int = 0, scenario: str = "iid_rayleigh"):
     w = weights()
+    family = get_family(scenario)
     rows = []
     users = USERS[:2] if quick else USERS
     subs = SUBCARRIERS[:2] if quick else SUBCARRIERS
     n_real = 2 if quick else 4
     for n in users:
         for k in subs:
-            pb = sample_params_batch(jax.random.PRNGKey(seed), n_real, N=n, K=k)
+            pb = family.sample_batch(jax.random.PRNGKey(seed), n_real, N=n, K=k)
             reps = run_proposed_batch(pb, w)
             # mean over channel realisations, one row per grid cell
             rep = {key: sum(r[key] for r in reps) / n_real for key in reps[0]}

@@ -8,26 +8,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import run_proposed, weights, write_csv
-from repro.core import sample_params
+from .common import run_proposed, run_proposed_batch, sample_scenario, sample_sweep, weights, write_csv
 
 MULTIPLES = (1.0, 2.0, 4.0, 8.0, 16.0)
 BASE_C = 1e6  # "light" workload, paper §V-D
 
 
-def run(quick: bool = True, seed: int = 0):
+def run(quick: bool = True, seed: int = 0, scenario: str = "iid_rayleigh"):
     w = weights()
     rows = []
     sweep = MULTIPLES[::2] if quick else MULTIPLES
-    for mult in sweep:
-        params = sample_params(
-            jax.random.PRNGKey(seed), C_round_bits=BASE_C * mult, L_rounds=10
-        )
-        rep = run_proposed(params, w)
+    # same key every point — only the payload moves; one batched solve
+    params_list = sample_sweep(
+        jax.random.PRNGKey(seed),
+        [{"C_round_bits": BASE_C * mult, "L_rounds": 10} for mult in sweep],
+        scenario=scenario,
+    )
+    for mult, rep in zip(sweep, run_proposed_batch(params_list, w)):
         rows.append({"workload_multiple": mult, **rep})
 
     # mixed per-group workloads (Fig 6a): 5 groups of 2 devices
-    params = sample_params(jax.random.PRNGKey(seed))
+    params = sample_scenario(jax.random.PRNGKey(seed), scenario=scenario)
     group_C = np.repeat([1.0, 2.0, 4.0, 8.0, 16.0], 2) * BASE_C * 10
     import dataclasses
 

@@ -1,102 +1,41 @@
-"""Channel / scenario sampling for FedSem (paper Section V defaults).
+"""Deprecated shims over the scenario registry (`repro.scenarios`).
 
-Path loss 128.1 + 37.6 log10(dist_km) dB with 8 dB log-normal shadowing,
-devices uniform in a 500 m disc, N0 = -174 dBm/Hz, B = 20 MHz, K = 50.
+The Section-V i.i.d. Rayleigh sampler that used to live here is now the
+``iid_rayleigh`` family in `repro.scenarios.iid_rayleigh` — same random ops,
+same key splits, bit-identical draws. These wrappers keep every existing
+call site (`repro.core.sample_params` et al.) working; new code should
+resolve a family by name instead:
+
+    from repro.scenarios import get_family
+    params = get_family("iid_rayleigh").sample(key, N=10, K=50)
+
+Imports of `repro.scenarios` are deferred into the function bodies because
+the scenarios package itself imports `repro.core.types` — a module-level
+import here would cycle through `repro.core.__init__`.
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
-from .types import SystemParams, dbm_to_watt
+from .types import SystemParams
 
 
-def sample_params(
-    key: jax.Array,
-    *,
-    N: int = 10,
-    K: int = 50,
-    B: float = 20e6,
-    radius_m: float = 500.0,
-    shadowing_db: float = 8.0,
-    p_max_dbm: float = 20.0,
-    f_max_hz: float = 2e9,
-    eta: int = 10,
-    d_samples: float = 500.0,
-    c_lo: float = 1e4,
-    c_hi: float = 3e4,
-    D_bits: float = 2.81e4,
-    C_round_bits: float = 4.15e6,
-    L_rounds: int = 10,
-    t_sc_max: float = 20.0,
-    q: int = 2,
-) -> SystemParams:
-    """Draw one scenario with the paper's Table-I defaults."""
-    k_pos, k_shadow, k_fade, k_c = jax.random.split(key, 4)
+def sample_params(key: jax.Array, **kwargs) -> SystemParams:
+    """Deprecated: use ``get_family("iid_rayleigh").sample``."""
+    from repro.scenarios import get_family
 
-    # uniform in a disc => r ~ sqrt(U) * radius
-    u = jax.random.uniform(k_pos, (N,), minval=1e-3)
-    dist_km = jnp.sqrt(u) * radius_m / 1000.0
-    pl_db = 128.1 + 37.6 * jnp.log10(dist_km)
-    shadow = shadowing_db * jax.random.normal(k_shadow, (N,))
-    # small-scale Rayleigh fading per subcarrier (block fading in slot t)
-    ray = jax.random.exponential(k_fade, (N, K))
-    gain_lin = 10.0 ** (-(pl_db + shadow)[:, None] / 10.0) * ray
-
-    c = jax.random.uniform(k_c, (N,), minval=c_lo, maxval=c_hi)
-
-    ones = jnp.ones((N,), jnp.float32)
-    return SystemParams(
-        g=gain_lin.astype(jnp.float32),
-        c=c.astype(jnp.float32),
-        d=d_samples * ones,
-        D=D_bits * ones,
-        C=(C_round_bits * L_rounds) * ones,
-        p_max=dbm_to_watt(p_max_dbm) * ones,
-        f_max=f_max_hz * ones,
-        t_sc_max=t_sc_max * ones,
-        N=N,
-        K=K,
-        B=B,
-        q=q,
-        eta=eta,
-    )
+    return get_family("iid_rayleigh").sample(key, **kwargs)
 
 
 def sample_params_batch(key: jax.Array, batch: int, **kwargs) -> SystemParams:
-    """Draw ``batch`` i.i.d. scenarios stacked on a leading axis.
+    """Deprecated: use ``get_family("iid_rayleigh").sample_batch``."""
+    from repro.scenarios import get_family
 
-    Same per-scenario defaults as `sample_params`; the result feeds
-    `repro.core.solve_batch` directly (``g`` has shape (batch, N, K)).
-    """
-    if batch < 1:
-        raise ValueError(f"batch must be >= 1, got {batch}")
-    keys = jax.random.split(key, batch)
-    return jax.vmap(lambda k: sample_params(k, **kwargs))(keys)
+    return get_family("iid_rayleigh").sample_batch(key, batch, **kwargs)
 
 
-def sample_request_stream(
-    key: jax.Array,
-    n_requests: int,
-    *,
-    sizes=((3, 8), (4, 12), (6, 16)),
-    bbar: float = 20e6 / 50,
-    **kwargs,
-) -> list:
-    """Draw a heterogeneous scenario stream for the serving layer.
+def sample_request_stream(key: jax.Array, n_requests: int, **kwargs) -> list:
+    """Deprecated: use ``get_family("iid_rayleigh").stream``."""
+    from repro.scenarios import get_family
 
-    Each request picks a uniform (N, K) from ``sizes`` and shares the same
-    per-subcarrier bandwidth ``bbar`` (total bandwidth B = bbar * K scales
-    with K). Sharing bbar is what lets different-size requests pad into the
-    same `ShapeBucket` and batch through one compiled solve — bbar is the
-    only way bandwidth enters the rate math, and `pad_params` preserves it.
-    Returns a list of exact-shape `SystemParams` (the service pads them).
-    """
-    if n_requests < 1:
-        raise ValueError(f"n_requests must be >= 1, got {n_requests}")
-    out = []
-    for i in range(n_requests):
-        k_size, k_params = jax.random.split(jax.random.fold_in(key, i))
-        n, k = sizes[int(jax.random.randint(k_size, (), 0, len(sizes)))]
-        out.append(sample_params(k_params, N=n, K=k, B=bbar * k, **kwargs))
-    return out
+    return get_family("iid_rayleigh").stream(key, n_requests, **kwargs)

@@ -29,13 +29,13 @@ from repro.core import (
     AllocatorResult,
     SystemParams,
     Weights,
-    sample_params,
     solve_batch,
     stack_params,
     tree_index,
 )
 from repro.core.system import report
 from repro.optim.optimizers import sgd
+from repro.scenarios import get_family
 
 
 class FLConfig(NamedTuple):
@@ -47,6 +47,7 @@ class FLConfig(NamedTuple):
     kappa: tuple = (1.0, 1.0, 1.0)
     allocator_inner: str = "pgd"   # fast + strong inner for the driver
     compress: bool = True          # top-|rho| update sparsification
+    scenario: str = "iid_rayleigh"  # registered scenario family for channels
     seed: int = 0
 
 
@@ -73,9 +74,13 @@ def plan_allocations(
     Returns the batch-stacked ``SystemParams`` (leading axis = round) and the
     batched `AllocatorResult` from a single `solve_batch` call — one trace /
     compile for the whole FL run instead of one per round.
+
+    Channels come from the `cfg.scenario` registry family; the default
+    (``iid_rayleigh``) draws bit-identically to the pre-registry sampler.
     """
+    family = get_family(cfg.scenario)
     scenarios = [
-        sample_params(
+        family.sample(
             round_channel_key(key, rnd),
             N=cfg.n_clients,
             K=cfg.n_subcarriers,

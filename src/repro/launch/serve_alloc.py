@@ -2,10 +2,13 @@
 
   PYTHONPATH=src python -m repro.launch.serve_alloc --requests 32 --rate 20
   PYTHONPATH=src python -m repro.launch.serve_alloc --driver real --ladder learned --smoke
+  PYTHONPATH=src python -m repro.launch.serve_alloc --driver real --scenario gauss_markov --ladder auto --smoke
 
 Generates a mixed-size scenario stream (shared per-subcarrier bandwidth so
-sizes co-batch in one `ShapeBucket`), warms the compiled-solver cache, and
-drives the micro-batched service two ways:
+sizes co-batch in one `ShapeBucket`) from any registered scenario family
+(``--scenario``; ``gauss_markov`` gives time-correlated fading instead of
+i.i.d. redraws per request), warms the compiled-solver cache, and drives the
+micro-batched service two ways:
 
   * ``--driver virtual`` (default) — the reproducible discrete-event
     simulation: Poisson arrivals on a virtual clock, solves charged at
@@ -20,9 +23,12 @@ drives the micro-batched service two ways:
 
 ``--ladder learned`` fits an autoscaling bucket ladder to the stream's
 observed (N, K) mix (`repro.serve.ladder`) instead of `DEFAULT_BUCKETS` and
-prints the predicted padded-area waste of both. ``--policy exact
---max-batch 1`` degenerates to the solve-per-request baseline the serving
-benchmark compares against.
+prints the predicted padded-area waste of both. ``--ladder auto`` (real
+driver only) starts from `DEFAULT_BUCKETS` and lets the driver's solver
+thread refit online when the observed mix's padded waste drifts past
+`DriverConfig.refit_waste_threshold` — no pre-fit pass over the stream.
+``--policy exact --max-batch 1`` degenerates to the solve-per-request
+baseline the serving benchmark compares against.
 """
 from __future__ import annotations
 
@@ -32,12 +38,14 @@ import sys
 
 import jax
 
-from repro.core import DEFAULT_BUCKETS, AllocatorConfig, sample_request_stream
+from repro.core import DEFAULT_BUCKETS, AllocatorConfig
 from repro.core.pgd import PGDConfig
 from repro.core.system import feasible
+from repro.scenarios import list_families
 from repro.serve import (
     AllocService,
     BatchPolicy,
+    DriverConfig,
     LadderLearner,
     RealClockDriver,
     ServeConfig,
@@ -45,6 +53,7 @@ from repro.serve import (
     poisson_arrivals,
     run_load,
     same_hardened_assignments,
+    scenario_stream,
 )
 
 
@@ -64,10 +73,11 @@ def build_config(args, buckets) -> ServeConfig:
 def fit_ladder(args, requests):
     """Resolve the bucket ladder for this run (None = exact shapes)."""
     if args.policy == "exact":
-        if args.ladder == "learned":
-            print("--policy exact serves exact shapes; --ladder learned ignored")
+        if args.ladder != "fixed":
+            print(f"--policy exact serves exact shapes; --ladder {args.ladder} ignored")
         return None
-    if args.ladder == "fixed":
+    if args.ladder in ("fixed", "auto"):
+        # auto starts from the defaults; the driver refits online on drift
         return DEFAULT_BUCKETS
     learner = LadderLearner(min_samples=1)
     for p in requests:
@@ -82,17 +92,37 @@ def fit_ladder(args, requests):
     return snap.buckets
 
 
-def drive_real(service, requests, arrivals) -> tuple[list, float]:
+def drive_real(service, requests, arrivals, args) -> tuple[list, float]:
     """Pace the stream on the real clock through a `RealClockDriver`.
 
-    No `LadderLearner` is attached: when ``--ladder learned`` the ladder was
-    already fit on this same stream's shapes, and the driver observing them
-    again would double-weight the prefix in any later refit."""
-    driver = RealClockDriver(service)
+    ``--ladder auto`` attaches a `LadderLearner` plus the auto-refit
+    thresholds, so the solver thread re-learns the bucket ladder mid-stream
+    when the observed shape mix drifts. Otherwise no learner is attached:
+    when ``--ladder learned`` the ladder was already fit on this same
+    stream's shapes, and the driver observing them again would double-weight
+    the prefix in any later refit."""
+    if args.ladder == "auto" and args.policy != "exact":
+        check = 4 if args.smoke else 64
+        driver = RealClockDriver(
+            service,
+            cfg=DriverConfig(
+                refit_waste_threshold=0.15,
+                refit_check_every=check,
+                refit_min_samples=check,
+            ),
+            ladder=LadderLearner(min_samples=1),
+        )
+    else:
+        driver = RealClockDriver(service)
     futures, t_start = pace_stream(driver, requests, arrivals)
     driver.close(timeout=300.0)
     makespan = driver.now() - t_start
     completions = [f.result(timeout=0.0) for f in futures]  # resolved by drain
+    if driver.ladder is not None:
+        print(
+            f"auto-refits: {driver.auto_refits}; serving ladder now "
+            f"{[(b.N, b.K) for b in service.cfg.buckets]}"
+        )
     return completions, makespan
 
 
@@ -113,10 +143,19 @@ def main() -> int:
     )
     ap.add_argument(
         "--ladder",
-        choices=("fixed", "learned"),
+        choices=("fixed", "learned", "auto"),
         default="fixed",
         help="fixed: DEFAULT_BUCKETS; learned: fit the bucket ladder to the "
-        "stream's observed (N, K) mix before serving",
+        "stream's observed (N, K) mix before serving; auto: start fixed and "
+        "let the real-clock driver refit online on shape-mix drift "
+        "(--driver real only)",
+    )
+    ap.add_argument(
+        "--scenario",
+        choices=list_families(),
+        default="iid_rayleigh",
+        help="registered scenario family the request stream is drawn from "
+        "(gauss_markov: time-correlated fading across requests)",
     )
     ap.add_argument("--inner", choices=("pgd", "sca", "auto"), default="pgd")
     ap.add_argument("--seed", type=int, default=0)
@@ -129,11 +168,14 @@ def main() -> int:
         "XLA_FLAGS=--xla_force_host_platform_device_count=8 to try it on CPU",
     )
     args = ap.parse_args()
+    if args.ladder == "auto" and args.driver != "real":
+        ap.error("--ladder auto needs --driver real (online refit lives in "
+                 "the real-clock driver's solver thread)")
 
     key = jax.random.PRNGKey(args.seed)
     sizes = ((3, 8), (4, 8)) if args.smoke else ((3, 8), (4, 12), (6, 16))
     n = min(args.requests, 8) if args.smoke else args.requests
-    requests = sample_request_stream(key, n, sizes=sizes)
+    requests = scenario_stream(key, n, scenario=args.scenario, sizes=sizes)
     arrivals = poisson_arrivals(jax.random.fold_in(key, 1), n, args.rate)
 
     buckets = fit_ladder(args, requests)
@@ -148,7 +190,7 @@ def main() -> int:
     service.warmup(requests)
 
     if args.driver == "real":
-        completions, makespan = drive_real(service, requests, arrivals)
+        completions, makespan = drive_real(service, requests, arrivals, args)
         summary = service.metrics.summary()
         busy = service.metrics.solves_s.total     # exact even past the cap
     else:

@@ -1,0 +1,169 @@
+"""`ScenarioFamily` protocol + the string-keyed scenario registry.
+
+Every layer that needs a wireless scenario — `solve_batch` sweeps, the FL
+driver, the serving load generator, the benchmark figures — draws it through
+one of the registered families instead of hand-rolling a sampler:
+
+    from repro.scenarios import get_family
+    fam = get_family("iid_rayleigh")
+    params   = fam.sample(key, N=10, K=50)          # one SystemParams
+    batch    = fam.sample_batch(key, 16, N=4, K=12)  # stacked (B, N, K)
+    requests = fam.stream(key, 64, sizes=((3, 8), (4, 12)))  # serving stream
+
+A family is **named** (its registry key), **seedable** (every draw is a pure
+function of the JAX PRNG key), and produces three shapes of output:
+
+* ``sample``       — one exact-shape `SystemParams`;
+* ``sample_batch`` — ``batch`` i.i.d. draws stacked on a leading axis
+  (feeds `repro.core.solve_batch` directly; default implementation vmaps
+  ``sample`` over split keys, so batch == stacked singles by construction);
+* ``stream``       — a list of mixed-size requests for the serving layer,
+  all sharing one per-subcarrier bandwidth ``bbar`` so different sizes
+  co-batch in one `ShapeBucket` (`pad_params` preserves ``bbar`` exactly).
+  The default stream redraws i.i.d. per request; stateful families (e.g.
+  ``gauss_markov``) override it with time-correlated traces.
+
+Correctness gate (asserted in `tests/test_scenarios.py` for every registered
+family): the allocator stays feasible and beats all paper baselines on the
+family's draws, matches the exhaustive oracle on small (N, K), and padded-
+bucket solves return the identical hardened assignment as exact-shape solves.
+Diversity never outruns correctness.
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import SystemParams, dbm_to_watt
+
+#: default mixed-size serving stream (matches the pre-registry
+#: `sample_request_stream` defaults, so existing call sites are unchanged)
+DEFAULT_STREAM_SIZES = ((3, 8), (4, 12), (6, 16))
+#: default per-subcarrier bandwidth of a stream: the Table-I B/K
+DEFAULT_STREAM_BBAR = 20e6 / 50
+
+
+def table1_population(
+    N: int,
+    *,
+    d_samples: float = 500.0,
+    D_bits: float = 2.81e4,
+    C_round_bits: float = 4.15e6,
+    L_rounds: int = 10,
+    t_sc_max: float = 20.0,
+    p_max_dbm: float = 20.0,
+    f_max_hz: float = 2e9,
+) -> dict:
+    """The paper's Table-I homogeneous device population as `SystemParams`
+    keyword arrays (everything but the channel gain ``g`` and cycles ``c``).
+
+    Families with richer populations (``hetero_classes``) replace individual
+    entries; the rest share this single definition instead of each sampler
+    re-plumbing the same seven kwargs.
+    """
+    ones = jnp.ones((N,), jnp.float32)
+    return dict(
+        d=d_samples * ones,
+        D=D_bits * ones,
+        C=(C_round_bits * L_rounds) * ones,
+        p_max=dbm_to_watt(p_max_dbm) * ones,
+        f_max=f_max_hz * ones,
+        t_sc_max=t_sc_max * ones,
+    )
+
+
+class ScenarioFamily:
+    """Base class for registered scenario generators (module docstring).
+
+    Subclasses set ``name`` and implement ``sample``; ``sample_batch`` and
+    ``stream`` have law-preserving defaults built on it.
+    """
+
+    #: registry key; subclasses must override
+    name: str = ""
+
+    def sample(self, key: jax.Array, *, N: int = 10, K: int = 50, **kwargs) -> SystemParams:
+        """Draw one exact-shape scenario. Pure in ``key``."""
+        raise NotImplementedError
+
+    def sample_batch(self, key: jax.Array, batch: int, **kwargs) -> SystemParams:
+        """Draw ``batch`` i.i.d. scenarios stacked on a leading axis.
+
+        Defined as ``vmap(sample)`` over ``jax.random.split(key, batch)``, so
+        ``tree_index(sample_batch(key, B), i) == sample(split(key, B)[i])``
+        — the batch==stacked-singles equivalence every family is tested on.
+        """
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        keys = jax.random.split(key, batch)
+        return jax.vmap(lambda k: self.sample(k, **kwargs))(keys)
+
+    def stream(
+        self,
+        key: jax.Array,
+        n_requests: int,
+        *,
+        sizes: Iterable[tuple[int, int]] = DEFAULT_STREAM_SIZES,
+        bbar: float = DEFAULT_STREAM_BBAR,
+        **kwargs,
+    ) -> list[SystemParams]:
+        """Draw a mixed-size request stream for the serving layer.
+
+        Each request picks a uniform (N, K) from ``sizes`` and shares the
+        same per-subcarrier bandwidth ``bbar`` (total B = bbar * K scales
+        with K) so different sizes pad into one `ShapeBucket` and co-batch.
+        The default is i.i.d. per request; stateful families override.
+        """
+        sizes = tuple(sizes)
+        _validate_stream(n_requests, sizes)
+        out = []
+        for i in range(n_requests):
+            k_size, k_params = jax.random.split(jax.random.fold_in(key, i))
+            n, k = sizes[int(jax.random.randint(k_size, (), 0, len(sizes)))]
+            out.append(self.sample(k_params, N=n, K=k, B=bbar * k, **kwargs))
+        return out
+
+
+def _validate_stream(n_requests: int, sizes: tuple) -> None:
+    if n_requests < 1:
+        raise ValueError(f"n_requests must be >= 1, got {n_requests}")
+    if not sizes:
+        raise ValueError("stream needs at least one (N, K) size")
+    for n, k in sizes:
+        if k < n:
+            raise ValueError(
+                f"stream size (N={n}, K={k}) violates K >= N (SystemParams contract)"
+            )
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_FAMILIES: dict[str, ScenarioFamily] = {}
+
+
+def register(family: ScenarioFamily) -> ScenarioFamily:
+    """Register a family instance under ``family.name`` (unique)."""
+    if not family.name:
+        raise ValueError(f"{type(family).__name__} has no name; set .name")
+    if family.name in _FAMILIES:
+        raise ValueError(f"scenario family {family.name!r} already registered")
+    _FAMILIES[family.name] = family
+    return family
+
+
+def get_family(name: str) -> ScenarioFamily:
+    """Resolve a registered family by name (the `--scenario` flag's lookup)."""
+    try:
+        return _FAMILIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scenario family {name!r}; registered: {list_families()}"
+        ) from None
+
+
+def list_families() -> tuple[str, ...]:
+    return tuple(sorted(_FAMILIES))

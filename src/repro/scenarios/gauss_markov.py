@@ -1,0 +1,179 @@
+"""Gauss-Markov (AR(1)) time-correlated fading family.
+
+`iid_rayleigh` redraws the whole scenario per request, so consecutive serving
+requests are statistically independent — unrealistic for a cell whose users
+stay put between allocation slots. This family models each subcarrier's
+small-scale fading as a first-order Gauss-Markov process on the complex
+envelope ``h = (x + iy) / sqrt(2)``:
+
+    x' = corr * x + sqrt(1 - corr^2) * eps,   eps ~ N(0, 1)   (same for y)
+
+so the power gain ``|h|^2 = (x^2 + y^2) / 2`` has the same exponential
+(Rayleigh-power) marginal as `iid_rayleigh` at every step — single draws are
+distribution-identical to i.i.d. Rayleigh — while successive draws correlate
+with coefficient ``corr^2``. Large-scale geometry (positions, shadowing) and
+cycle counts are frozen per stream, which is the drift the serving ladder
+sees: the shape mix and gain profile wander instead of resampling.
+
+``sample``/``sample_batch`` are stationary (pure in the key, oracle-gated
+like every family). ``stream`` is the stateful part: it keeps one fading
+state per (N, K) size and advances it each time that size recurs, returning
+materialized `SystemParams` so `serve/loadgen`, `RealClockDriver`, and the
+real==virtual replay gate consume it unchanged.
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import SystemParams, dbm_to_watt
+
+from .base import (
+    DEFAULT_STREAM_BBAR,
+    DEFAULT_STREAM_SIZES,
+    ScenarioFamily,
+    _validate_stream,
+    register,
+)
+
+
+def _envelope_gain(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Power gain of the complex envelope (x + iy)/sqrt(2): exp(1) marginal."""
+    return (x * x + y * y) / 2.0
+
+
+class GaussMarkov(ScenarioFamily):
+    name = "gauss_markov"
+
+    def sample(
+        self,
+        key: jax.Array,
+        *,
+        N: int = 10,
+        K: int = 50,
+        B: float = 20e6,
+        radius_m: float = 500.0,
+        shadowing_db: float = 8.0,
+        p_max_dbm: float = 20.0,
+        f_max_hz: float = 2e9,
+        eta: int = 10,
+        d_samples: float = 500.0,
+        c_lo: float = 1e4,
+        c_hi: float = 3e4,
+        D_bits: float = 2.81e4,
+        C_round_bits: float = 4.15e6,
+        L_rounds: int = 10,
+        t_sc_max: float = 20.0,
+        q: int = 2,
+    ) -> SystemParams:
+        """One stationary draw (the AR process's marginal law)."""
+        k_pos, k_shadow, k_fade, k_c = jax.random.split(key, 4)
+        pl_shadow_db = _large_scale_db(k_pos, k_shadow, N, radius_m, shadowing_db)
+        x, y = jax.random.normal(k_fade, (2, N, K))
+        gain_lin = 10.0 ** (-pl_shadow_db[:, None] / 10.0) * _envelope_gain(x, y)
+        c = jax.random.uniform(k_c, (N,), minval=c_lo, maxval=c_hi)
+        return _assemble(
+            gain_lin, c, N=N, K=K, B=B, d_samples=d_samples, D_bits=D_bits,
+            C_round_bits=C_round_bits, L_rounds=L_rounds, p_max_dbm=p_max_dbm,
+            f_max_hz=f_max_hz, t_sc_max=t_sc_max, q=q, eta=eta,
+        )
+
+    def stream(
+        self,
+        key: jax.Array,
+        n_requests: int,
+        *,
+        sizes: Iterable[tuple[int, int]] = DEFAULT_STREAM_SIZES,
+        bbar: float = DEFAULT_STREAM_BBAR,
+        corr: float = 0.9,
+        radius_m: float = 500.0,
+        shadowing_db: float = 8.0,
+        p_max_dbm: float = 20.0,
+        f_max_hz: float = 2e9,
+        eta: int = 10,
+        d_samples: float = 500.0,
+        c_lo: float = 1e4,
+        c_hi: float = 3e4,
+        D_bits: float = 2.81e4,
+        C_round_bits: float = 4.15e6,
+        L_rounds: int = 10,
+        t_sc_max: float = 20.0,
+        q: int = 2,
+    ) -> list[SystemParams]:
+        """Time-correlated request stream: one persistent user population per
+        (N, K) size, AR(1)-advanced each time that size recurs.
+
+        Deterministic in ``key`` (so the real-clock driver's virtual replay
+        regenerates the identical stream). Size sequence uses the same
+        fold_in/uniform-pick scheme as the default i.i.d. stream.
+        """
+        sizes = tuple(sizes)
+        _validate_stream(n_requests, sizes)
+        if not 0.0 <= corr < 1.0:
+            raise ValueError(f"corr must be in [0, 1), got {corr}")
+        innov = float(jnp.sqrt(1.0 - corr * corr))
+
+        # per-(N, K) persistent population: (pl_shadow_db, c, x, y)
+        state: dict[tuple[int, int], tuple] = {}
+        out = []
+        for i in range(n_requests):
+            k_size, k_step = jax.random.split(jax.random.fold_in(key, i))
+            n, k = sizes[int(jax.random.randint(k_size, (), 0, len(sizes)))]
+            if (n, k) not in state:
+                k_pos, k_shadow, k_fade, k_c = jax.random.split(k_step, 4)
+                pls = _large_scale_db(k_pos, k_shadow, n, radius_m, shadowing_db)
+                c = jax.random.uniform(k_c, (n,), minval=c_lo, maxval=c_hi)
+                x, y = jax.random.normal(k_fade, (2, n, k))
+            else:
+                pls, c, x, y = state[(n, k)]
+                ex, ey = jax.random.normal(k_step, (2, n, k))
+                x = corr * x + innov * ex
+                y = corr * y + innov * ey
+            state[(n, k)] = (pls, c, x, y)
+            gain_lin = 10.0 ** (-pls[:, None] / 10.0) * _envelope_gain(x, y)
+            out.append(
+                _assemble(
+                    gain_lin, c, N=n, K=k, B=bbar * k, d_samples=d_samples,
+                    D_bits=D_bits, C_round_bits=C_round_bits, L_rounds=L_rounds,
+                    p_max_dbm=p_max_dbm, f_max_hz=f_max_hz, t_sc_max=t_sc_max,
+                    q=q, eta=eta,
+                )
+            )
+        return out
+
+
+def _large_scale_db(
+    k_pos: jax.Array, k_shadow: jax.Array, N: int, radius_m: float, shadowing_db: float
+) -> jax.Array:
+    """Path loss + shadowing in dB, same law as `iid_rayleigh`."""
+    u = jax.random.uniform(k_pos, (N,), minval=1e-3)
+    dist_km = jnp.sqrt(u) * radius_m / 1000.0
+    pl_db = 128.1 + 37.6 * jnp.log10(dist_km)
+    return pl_db + shadowing_db * jax.random.normal(k_shadow, (N,))
+
+
+def _assemble(
+    gain_lin, c, *, N, K, B, d_samples, D_bits, C_round_bits, L_rounds,
+    p_max_dbm, f_max_hz, t_sc_max, q, eta,
+) -> SystemParams:
+    ones = jnp.ones((N,), jnp.float32)
+    return SystemParams(
+        g=gain_lin.astype(jnp.float32),
+        c=c.astype(jnp.float32),
+        d=d_samples * ones,
+        D=D_bits * ones,
+        C=(C_round_bits * L_rounds) * ones,
+        p_max=dbm_to_watt(p_max_dbm) * ones,
+        f_max=f_max_hz * ones,
+        t_sc_max=t_sc_max * ones,
+        N=N,
+        K=K,
+        B=B,
+        q=q,
+        eta=eta,
+    )
+
+
+FAMILY = register(GaussMarkov())

@@ -1,0 +1,140 @@
+"""Heterogeneous device-class population family.
+
+`iid_rayleigh` draws every device from one homogeneous population (uniform
+cycle counts, shared ``f_max``/``p_max``). Real federated fleets are tiered:
+phones, laptops, edge boxes. This family builds device classes from the
+architecture registry (`repro.configs.registry`) — each registered arch's
+analytic ``active_param_count()`` sets its class's relative per-sample
+compute — and draws each device's class uniformly, giving it that class's
+``c`` (cycles/sample, with +/-10% within-class jitter), ``f_max`` (CPU tier),
+and ``p_max`` (radio tier).
+
+Cycle counts are normalised so the smallest class lands at the paper's
+Table-I floor (1e4 cycles/sample) and scale with the cube root of the
+active-parameter ratio — absolute LM parameter counts (1e9+) would make
+every deadline infeasible; what matters for the allocator is the *spread*:
+slow-CPU/large-model devices force the assignment and frequency steps to
+trade off against radio-rich ones. The channel itself stays the Section-V
+i.i.d. Rayleigh law, so any objective difference vs `iid_rayleigh` is
+attributable to population heterogeneity alone.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config, list_archs
+from repro.core.types import SystemParams, dbm_to_watt
+
+from .base import ScenarioFamily, register, table1_population
+
+
+class DeviceClass(NamedTuple):
+    """One device tier: representative arch + allocator-visible resources."""
+
+    arch: str
+    c_cycles: float      # cycles per sample (class centre, +/-10% jitter)
+    f_max_hz: float      # CPU frequency ceiling
+    p_max_dbm: float     # transmit power ceiling
+
+    @property
+    def p_max_w(self) -> float:
+        return float(dbm_to_watt(self.p_max_dbm))
+
+
+#: Table-I floor for the smallest class's cycles/sample
+_C_FLOOR = 1e4
+#: CPU and radio tiers, smallest model class first
+_F_TIERS = (1.0e9, 2.0e9, 4.0e9)
+_P_TIERS = (17.0, 20.0, 23.0)
+
+
+def build_classes(n_classes: int = 3) -> tuple[DeviceClass, ...]:
+    """Partition the registry's archs into ``n_classes`` size tiers.
+
+    Archs are sorted by ``active_param_count()`` and split into contiguous
+    groups; each group's median arch represents the class. ``c`` scales with
+    the cube root of the active-parameter ratio to the smallest class,
+    anchored at the Table-I floor.
+    """
+    if not 1 <= n_classes <= len(_F_TIERS):
+        raise ValueError(f"n_classes must be in [1, {len(_F_TIERS)}], got {n_classes}")
+    sized = sorted(
+        ((get_config(a).active_param_count(), a) for a in list_archs()),
+    )
+    groups = [sized[(i * len(sized)) // n_classes : ((i + 1) * len(sized)) // n_classes]
+              for i in range(n_classes)]
+    reps = [g[len(g) // 2] for g in groups]
+    base = reps[0][0]
+    return tuple(
+        DeviceClass(
+            arch=arch,
+            c_cycles=_C_FLOOR * float((count / base) ** (1.0 / 3.0)),
+            f_max_hz=_F_TIERS[i],
+            p_max_dbm=_P_TIERS[i],
+        )
+        for i, (count, arch) in enumerate(reps)
+    )
+
+
+class HeteroClasses(ScenarioFamily):
+    name = "hetero_classes"
+
+    def __init__(self, classes: tuple[DeviceClass, ...] | None = None):
+        self._classes = classes
+
+    @property
+    def classes(self) -> tuple[DeviceClass, ...]:
+        if self._classes is None:
+            self._classes = build_classes()
+        return self._classes
+
+    def sample(
+        self,
+        key: jax.Array,
+        *,
+        N: int = 10,
+        K: int = 50,
+        B: float = 20e6,
+        radius_m: float = 500.0,
+        shadowing_db: float = 8.0,
+        eta: int = 10,
+        q: int = 2,
+        **population,
+    ) -> SystemParams:
+        k_pos, k_shadow, k_fade, k_class, k_jit = jax.random.split(key, 5)
+
+        # Section-V channel, unchanged from iid_rayleigh
+        u = jax.random.uniform(k_pos, (N,), minval=1e-3)
+        dist_km = jnp.sqrt(u) * radius_m / 1000.0
+        pl_db = 128.1 + 37.6 * jnp.log10(dist_km)
+        shadow = shadowing_db * jax.random.normal(k_shadow, (N,))
+        ray = jax.random.exponential(k_fade, (N, K))
+        gain_lin = 10.0 ** (-(pl_db + shadow)[:, None] / 10.0) * ray
+
+        # per-device class draw + gather of the class resource columns
+        classes = self.classes
+        c_tab = jnp.asarray([cl.c_cycles for cl in classes], jnp.float32)
+        f_tab = jnp.asarray([cl.f_max_hz for cl in classes], jnp.float32)
+        p_tab = jnp.asarray([cl.p_max_w for cl in classes], jnp.float32)
+        idx = jax.random.randint(k_class, (N,), 0, len(classes))
+        jitter = jax.random.uniform(k_jit, (N,), minval=0.9, maxval=1.1)
+
+        pop = table1_population(N, **population)
+        pop["p_max"] = p_tab[idx]
+        pop["f_max"] = f_tab[idx]
+        return SystemParams(
+            g=gain_lin.astype(jnp.float32),
+            c=(c_tab[idx] * jitter).astype(jnp.float32),
+            **pop,
+            N=N,
+            K=K,
+            B=B,
+            q=q,
+            eta=eta,
+        )
+
+
+FAMILY = register(HeteroClasses())

@@ -1,0 +1,77 @@
+"""The paper's Section-V scenario: i.i.d. Rayleigh block fading.
+
+Path loss 128.1 + 37.6 log10(dist_km) dB with 8 dB log-normal shadowing,
+devices uniform in a 500 m disc, N0 = -174 dBm/Hz, B = 20 MHz, K = 50.
+
+This is the original `repro.core.channel.sample_params` relocated behind the
+registry — the random ops and key splits are unchanged, so draws are
+bit-identical to the pre-registry sampler (the FL driver's plan==sequential
+regression depends on that).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import SystemParams, dbm_to_watt
+
+from .base import ScenarioFamily, register
+
+
+class IidRayleigh(ScenarioFamily):
+    name = "iid_rayleigh"
+
+    def sample(
+        self,
+        key: jax.Array,
+        *,
+        N: int = 10,
+        K: int = 50,
+        B: float = 20e6,
+        radius_m: float = 500.0,
+        shadowing_db: float = 8.0,
+        p_max_dbm: float = 20.0,
+        f_max_hz: float = 2e9,
+        eta: int = 10,
+        d_samples: float = 500.0,
+        c_lo: float = 1e4,
+        c_hi: float = 3e4,
+        D_bits: float = 2.81e4,
+        C_round_bits: float = 4.15e6,
+        L_rounds: int = 10,
+        t_sc_max: float = 20.0,
+        q: int = 2,
+    ) -> SystemParams:
+        """Draw one scenario with the paper's Table-I defaults."""
+        k_pos, k_shadow, k_fade, k_c = jax.random.split(key, 4)
+
+        # uniform in a disc => r ~ sqrt(U) * radius
+        u = jax.random.uniform(k_pos, (N,), minval=1e-3)
+        dist_km = jnp.sqrt(u) * radius_m / 1000.0
+        pl_db = 128.1 + 37.6 * jnp.log10(dist_km)
+        shadow = shadowing_db * jax.random.normal(k_shadow, (N,))
+        # small-scale Rayleigh fading per subcarrier (block fading in slot t)
+        ray = jax.random.exponential(k_fade, (N, K))
+        gain_lin = 10.0 ** (-(pl_db + shadow)[:, None] / 10.0) * ray
+
+        c = jax.random.uniform(k_c, (N,), minval=c_lo, maxval=c_hi)
+
+        ones = jnp.ones((N,), jnp.float32)
+        return SystemParams(
+            g=gain_lin.astype(jnp.float32),
+            c=c.astype(jnp.float32),
+            d=d_samples * ones,
+            D=D_bits * ones,
+            C=(C_round_bits * L_rounds) * ones,
+            p_max=dbm_to_watt(p_max_dbm) * ones,
+            f_max=f_max_hz * ones,
+            t_sc_max=t_sc_max * ones,
+            N=N,
+            K=K,
+            B=B,
+            q=q,
+            eta=eta,
+        )
+
+
+FAMILY = register(IidRayleigh())

@@ -29,7 +29,7 @@ from .driver import (
 from .ladder import (
     LadderLearner, LadderSnapshot, learn_buckets, padded_area_waste,
 )
-from .loadgen import LoadResult, poisson_arrivals, run_load
+from .loadgen import LoadResult, poisson_arrivals, run_load, scenario_stream
 from .metrics import Reservoir, ServiceMetrics, percentile
 from .service import AllocService, Completion, ServeConfig
 
@@ -37,7 +37,7 @@ __all__ = [
     "AllocService", "Completion", "ServeConfig",
     "BatchPolicy", "MicroBatcher", "PendingRequest",
     "ServiceMetrics", "Reservoir", "percentile",
-    "LoadResult", "poisson_arrivals", "run_load",
+    "LoadResult", "poisson_arrivals", "run_load", "scenario_stream",
     "RealClockDriver", "DriverConfig", "AdmissionQueueFull", "DriverClosed",
     "pace_stream", "same_hardened_assignments",
     "LadderLearner", "LadderSnapshot", "learn_buckets", "padded_area_waste",

@@ -39,7 +39,15 @@ Thread topology (two roles, N callers + 1 solver):
 
 An optional `LadderLearner` observes every admitted (N, K); `refit()` swaps
 the service's bucket ladder in place between epochs (safe mid-stream, see
-`AllocService.set_buckets`).
+`AllocService.set_buckets`). With ``DriverConfig.refit_waste_threshold`` set,
+the solver thread also *auto*-refits: every ``refit_check_every`` admissions
+it scores the observed shape mix's padded-area waste under the service's
+current ladder and refits when the mix has drifted past the threshold — a
+time-correlated workload (the ``gauss_markov`` scenario stream) shifts its
+shape mix mid-run, and the ladder follows without an operator hook. Swapping
+ladders mid-stream cannot change answers: padding is answer-transparent
+(identical hardened X through any covering bucket), so the real==virtual
+equivalence gate holds across refits.
 """
 from __future__ import annotations
 
@@ -139,6 +147,17 @@ class DriverConfig(NamedTuple):
     #: reservoirs are: an indefinitely running driver must not grow
     #: per-request state — callers get every answer through their Future
     completion_log: int | None = 4096
+    #: auto-refit trigger: when a `LadderLearner` is attached and the
+    #: observed mix's relative padded-area waste under the service's CURRENT
+    #: ladder exceeds this, the solver thread refits and swaps the ladder
+    #: (None = manual ``driver.refit()`` only). An uncoverable shape scores
+    #: the current ladder inf, so drift into unserved sizes always trips it
+    refit_waste_threshold: float | None = None
+    #: admissions between drift checks (amortises the waste rescore)
+    refit_check_every: int = 64
+    #: observations required before the first auto-refit may fire (early
+    #: tiny mixes look maximally skewed; don't thrash the executable cache)
+    refit_min_samples: int = 32
 
 
 class RealClockDriver:
@@ -176,6 +195,11 @@ class RealClockDriver:
         #: most recent completions in completion order (bounded by
         #: ``cfg.completion_log``; every completion also resolves its Future)
         self.completions: deque[Completion] = deque(maxlen=cfg.completion_log)
+        #: auto-refit bookkeeping (solver-thread only): admissions seen, the
+        #: admission count that triggers the next drift check, refits fired
+        self._admitted = 0
+        self._next_refit_check = cfg.refit_check_every
+        self.auto_refits = 0
         self._closed = threading.Event()
         #: serialises the closed-check-then-enqueue in submit() against
         #: close()'s fence + post-join sweep, so an admission can never land
@@ -251,6 +275,38 @@ class RealClockDriver:
         self.service.set_buckets(snap.buckets)
         return snap
 
+    def _maybe_auto_refit(self) -> None:
+        """Solver-thread drift check (see `DriverConfig.refit_waste_threshold`):
+        every ``refit_check_every`` admissions, score the observed mix's waste
+        under the service's current ladder and refit when it drifts past the
+        threshold. A refit that learns the same ladder back skips the swap so
+        a stable-but-wasteful mix triggers at most one executable-cache churn.
+        """
+        cfg = self.cfg
+        if (
+            self.ladder is None
+            or cfg.refit_waste_threshold is None
+            or self._admitted < self._next_refit_check
+        ):
+            return
+        current = self.service.cfg.buckets
+        if current is None:
+            return                      # exact-shape service: nothing to swap
+        counts = self.ladder.counts()
+        if sum(counts.values()) < cfg.refit_min_samples:
+            # observe() runs on caller threads after the enqueue, so counts
+            # can trail admissions; retry next loop instead of consuming the
+            # check (bumping here could skip the only drift check a short
+            # stream ever gets)
+            return
+        self._next_refit_check = self._admitted + cfg.refit_check_every
+        waste = LadderLearner._waste_or_inf(counts, current)
+        if waste > cfg.refit_waste_threshold:
+            snap = self.ladder.refit()
+            if tuple(snap.buckets) != tuple(current):
+                self.service.set_buckets(snap.buckets)
+                self.auto_refits += 1
+
     def start(self) -> None:
         if not self._started:
             self._started = True
@@ -306,6 +362,7 @@ class RealClockDriver:
             **self.service.metrics.summary(),
             "queue_capacity": self.cfg.queue_capacity,
             "inflight": len(self._tickets),
+            "auto_refits": self.auto_refits,
         }
 
     # -- solver thread -------------------------------------------------------
@@ -317,6 +374,7 @@ class RealClockDriver:
         prepared, fut, t_enq = item
         req_id = self.service.admit(prepared, now=t_enq)
         self._tickets[req_id] = fut
+        self._admitted += 1
         return False
 
     def _admit_pending(self) -> bool:
@@ -369,6 +427,7 @@ class RealClockDriver:
             stop = self._admit_pending() or stop
             if stop:
                 break
+            self._maybe_auto_refit()
             done, _ = svc.flush_due(now=self.now())
             self._resolve(done)
         # graceful drain: late admissions that beat the fence, then flush

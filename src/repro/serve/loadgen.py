@@ -21,6 +21,7 @@ import jax
 import numpy as np
 
 from repro.core import SystemParams, Weights
+from repro.scenarios import get_family
 
 from .service import AllocService, Completion
 
@@ -31,6 +32,20 @@ def poisson_arrivals(key: jax.Array, n: int, rate_hz: float) -> np.ndarray:
         raise ValueError(f"rate_hz must be > 0, got {rate_hz}")
     gaps = np.asarray(jax.random.exponential(key, (n,))) / rate_hz
     return np.cumsum(gaps)
+
+
+def scenario_stream(
+    key: jax.Array, n: int, *, scenario: str = "iid_rayleigh", **kwargs
+) -> list[SystemParams]:
+    """Request stream drawn from a registered scenario family by name.
+
+    Thin resolver over ``get_family(scenario).stream`` so serving callers
+    (CLI, benchmarks) pick the workload with a string. Stateful families
+    (``gauss_markov``) return time-correlated traces; the default redraws
+    i.i.d. per request. Deterministic in ``key`` either way, which is what
+    lets the real-clock smoke replay the identical stream virtually.
+    """
+    return get_family(scenario).stream(key, n, **kwargs)
 
 
 class LoadResult(NamedTuple):

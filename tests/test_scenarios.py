@@ -1,0 +1,315 @@
+"""Scenario registry correctness gates (every registered family).
+
+The registry's contract is that diversity never outruns correctness: for
+EVERY registered family — not just the relocated `iid_rayleigh` — the same
+guarantees the repo asserts on the Section-V sampler must hold:
+
+* `sample_batch` == stacked `sample` singles, leaf for leaf;
+* draws stay finite/positive and survive `ShapeBucket` padding with the
+  masks and ``bbar`` invariants intact;
+* the allocator beats every paper baseline on the family's draws
+  (hypothesis-property over seeds);
+* on small (N, K) the exhaustive oracle cannot be much better than Alg. A2
+  (the Table-II gate, per family);
+* `solve_batch` through exact-shape and padded-bucket paths returns the
+  identical hardened assignment (the serving stack's transparency contract,
+  asserted here for the new `ris_geometry` / `hetero_classes` batches).
+
+Plus the stateful stream law of `gauss_markov`: time-correlated,
+replay-deterministic, and servable through the virtual-clock loadgen.
+"""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AllocatorConfig,
+    Weights,
+    sample_params,
+    solve,
+    solve_batch,
+    stack_params,
+    tree_index,
+)
+from repro.core import baselines as B
+from repro.core.exhaustive import solve_exhaustive
+from repro.core.pgd import PGDConfig
+from repro.core.system import feasible, report
+from repro.core.types import bucket_for, pad_params, unpad_alloc
+from repro.scenarios import (
+    DEFAULT_STREAM_BBAR,
+    ScenarioFamily,
+    build_classes,
+    get_family,
+    list_families,
+    register,
+)
+
+FAMILIES = list_families()
+W = Weights.ones()
+#: reduced-iteration config for the many-small-solves tests (same pattern as
+#: test_serve_alloc); the oracle/baseline gates use the full default PGD
+PGD_CFG = AllocatorConfig(inner="pgd", outer_iters=2, pgd=PGDConfig(steps=80))
+FULL_PGD = AllocatorConfig(inner="pgd")
+
+#: one compiled solver shared across families (same (N, K) => same program)
+_solve_full = jax.jit(lambda p: solve(p, W, FULL_PGD))
+_solve_small = jax.jit(lambda p: solve(p, W, PGD_CFG))
+
+
+# ---------------------------------------------------------------------------
+# registry mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_four_families_registered():
+    assert set(FAMILIES) >= {
+        "iid_rayleigh", "ris_geometry", "gauss_markov", "hetero_classes",
+    }
+
+
+def test_get_family_unknown_name():
+    with pytest.raises(ValueError, match="unknown scenario family"):
+        get_family("nope")
+
+
+def test_register_rejects_duplicates_and_unnamed():
+    class Dup(ScenarioFamily):
+        name = "iid_rayleigh"
+
+    with pytest.raises(ValueError, match="already registered"):
+        register(Dup())
+    with pytest.raises(ValueError, match="no name"):
+        register(ScenarioFamily())
+
+
+def test_channel_shims_are_the_registry_family():
+    """`repro.core.sample_params` (deprecated shim) == the registered
+    iid_rayleigh family, bit for bit — existing call sites and regressions
+    (e.g. the FL plan==sequential test) see unchanged draws."""
+    key = jax.random.PRNGKey(3)
+    a = sample_params(key, N=4, K=12)
+    b = get_family("iid_rayleigh").sample(key, N=4, K=12)
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# per-family invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_batch_equals_stacked_singles(name):
+    fam = get_family(name)
+    key = jax.random.PRNGKey(11)
+    pb = fam.sample_batch(key, 3, N=4, K=12)
+    singles = [fam.sample(k, N=4, K=12) for k in jax.random.split(key, 3)]
+    ref = stack_params(singles)
+    got_leaves, got_def = jax.tree.flatten(pb)
+    ref_leaves, ref_def = jax.tree.flatten(ref)
+    assert got_def == ref_def
+    for a, b in zip(got_leaves, ref_leaves):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_sample_finite_positive_and_padding_invariants(name):
+    fam = get_family(name)
+    p = fam.sample(jax.random.PRNGKey(5), N=3, K=8, B=DEFAULT_STREAM_BBAR * 8)
+    for arr in (p.g, p.c, p.d, p.D, p.C, p.p_max, p.f_max, p.t_sc_max):
+        a = np.asarray(arr)
+        assert np.isfinite(a).all() and (a > 0).all(), name
+    assert np.asarray(p.dev_mask).sum() == 3 and np.asarray(p.sc_mask).sum() == 8
+
+    bucket = bucket_for(p.N, p.K)
+    pp = pad_params(p, bucket.N, bucket.K)
+    # bbar is the only way bandwidth enters the rate math; padding preserves it
+    assert pp.B / pp.K == pytest.approx(p.B / p.K, rel=1e-6)
+    assert np.asarray(pp.dev_mask).sum() == 3 and np.asarray(pp.sc_mask).sum() == 8
+    assert np.isfinite(np.asarray(pp.g)).all()
+    # padded-region gains contribute nothing real: mask rows/cols are zeroed
+    g = np.asarray(pp.g)
+    assert (g[3:, :] == 0).all() and (g[:, 8:] == 0).all()
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_allocation_feasible_on_family(name):
+    p = get_family(name).sample(jax.random.PRNGKey(1), N=4, K=12)
+    res = _solve_small(p)
+    assert bool(feasible(p, res.alloc)), name
+    assert np.isfinite(float(report(p, W, res.alloc)["objective"]))
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+@hypothesis.settings(max_examples=3, deadline=None)
+@hypothesis.given(seed=st.integers(min_value=0, max_value=10_000))
+def test_allocator_beats_all_baselines_on_family(name, seed):
+    """The Fig.-4 gate, per registered family: Alg. A2 (full PGD inner) <=
+    every paper baseline on this family's draws."""
+    p = get_family(name).sample(jax.random.PRNGKey(seed), N=4, K=12)
+    obj = float(report(p, W, _solve_full(p).alloc)["objective"])
+    key = jax.random.PRNGKey(seed + 1)
+    for base_name, alloc in [
+        ("equal", B.equal_allocation(p)),
+        ("comm_only", B.comm_opt_only(p, W, key)),
+        ("comp_only", B.comp_opt_only(p, W)),
+        ("random", B.random_allocation(p, key)),
+    ]:
+        base = float(report(p, W, alloc)["objective"])
+        assert obj <= base + 1e-3, (
+            f"{name}: proposed {obj} worse than {base_name} {base}"
+        )
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_exhaustive_oracle_gate(name):
+    """Table-II gate per family: on small (N, K) the exhaustive grid oracle
+    must not be much better than Alg. A2 on this family's draws.
+
+    Grids respect the tightest per-device budget (min f_max / min p_max), so
+    the oracle never uses power or frequency some device doesn't have; the
+    continuous allocator may exceed the coarse grid, hence the one-sided
+    tolerance (same as benchmarks/table2)."""
+    p = get_family(name).sample(jax.random.PRNGKey(2), N=3, K=4)
+    obj = float(report(p, W, _solve_full(p).alloc)["objective"])
+
+    f_hi = float(np.min(np.asarray(p.f_max)))
+    p_hi_dbm = 10.0 * np.log10(float(np.min(np.asarray(p.p_max)))) + 30.0
+    ex = solve_exhaustive(
+        p, W,
+        f_levels=np.linspace(0.25e9, f_hi, 4),
+        p_levels_dbm=np.linspace(4.0, p_hi_dbm, 3),
+        rho_levels=np.linspace(0.2, 1.0, 4),
+    )
+    assert np.isfinite(float(ex.value)), name
+    assert float(ex.value) >= obj - 0.35 * abs(obj), (
+        f"{name}: oracle {float(ex.value)} much better than proposed {obj}"
+    )
+
+
+@pytest.mark.parametrize("name", ("ris_geometry", "hetero_classes"))
+def test_solve_batch_padded_equals_exact(name):
+    """Acceptance gate: `solve_batch` over a family batch produces the
+    identical hardened X through the exact-shape and padded-bucket paths."""
+    fam = get_family(name)
+    bbar = DEFAULT_STREAM_BBAR
+    singles = [
+        fam.sample(k, N=4, K=12, B=bbar * 12)
+        for k in jax.random.split(jax.random.PRNGKey(9), 3)
+    ]
+    exact = solve_batch(stack_params(singles), W, PGD_CFG)
+
+    bucket = bucket_for(4, 12)          # pads into (4, 16) under the defaults
+    assert (bucket.N, bucket.K) != (4, 12)
+    padded = solve_batch(
+        stack_params([pad_params(s, bucket.N, bucket.K) for s in singles]),
+        W, PGD_CFG,
+    )
+    for i, s in enumerate(singles):
+        a_exact = tree_index(exact.alloc, i)
+        a_pad = unpad_alloc(tree_index(padded.alloc, i), s.N, s.K)
+        np.testing.assert_array_equal(
+            np.asarray(a_pad.X), np.asarray(a_exact.X)
+        )
+        np.testing.assert_allclose(
+            float(a_pad.rho), float(a_exact.rho), rtol=5e-3
+        )
+        assert bool(feasible(s, a_pad))
+
+
+# ---------------------------------------------------------------------------
+# streams
+# ---------------------------------------------------------------------------
+
+
+def test_stream_shares_bbar_across_sizes():
+    reqs = get_family("ris_geometry").stream(
+        jax.random.PRNGKey(4), 6, sizes=((3, 8), (4, 12))
+    )
+    assert {(r.N, r.K) for r in reqs} <= {(3, 8), (4, 12)}
+    for r in reqs:
+        assert r.B / r.K == pytest.approx(DEFAULT_STREAM_BBAR, rel=1e-6)
+
+
+def test_stream_validates_sizes():
+    fam = get_family("iid_rayleigh")
+    with pytest.raises(ValueError, match="K >= N"):
+        fam.stream(jax.random.PRNGKey(0), 4, sizes=((8, 4),))
+    with pytest.raises(ValueError, match="n_requests"):
+        fam.stream(jax.random.PRNGKey(0), 0)
+    with pytest.raises(ValueError, match="at least one"):
+        fam.stream(jax.random.PRNGKey(0), 4, sizes=())
+
+
+def test_gauss_markov_stream_correlated_and_deterministic():
+    """The stateful stream: successive same-size requests share geometry and
+    correlate strongly (AR(1) fading), yet never repeat exactly; the whole
+    stream is a pure function of the key (replay equivalence depends on it)."""
+    fam = get_family("gauss_markov")
+    reqs = fam.stream(jax.random.PRNGKey(6), 20, sizes=((4, 12),), corr=0.9)
+    g = [np.asarray(r.g).ravel() for r in reqs]
+    corrs = [np.corrcoef(g[i], g[i + 1])[0, 1] for i in range(len(g) - 1)]
+    assert min(corrs) > 0.3                      # time-correlated...
+    assert all(not np.array_equal(g[i], g[i + 1]) for i in range(len(g) - 1))
+    # large-scale population frozen across the trace
+    np.testing.assert_array_equal(np.asarray(reqs[0].c), np.asarray(reqs[-1].c))
+
+    replay = fam.stream(jax.random.PRNGKey(6), 20, sizes=((4, 12),), corr=0.9)
+    for a, b in zip(reqs, replay):
+        np.testing.assert_array_equal(np.asarray(a.g), np.asarray(b.g))
+
+    # corr=0 degenerates to i.i.d. redraws of the fading (fresh state each hit)
+    iid = fam.stream(jax.random.PRNGKey(6), 6, sizes=((4, 12),), corr=0.0)
+    c01 = np.corrcoef(np.asarray(iid[1].g).ravel(), np.asarray(iid[2].g).ravel())
+    assert abs(c01[0, 1]) < 0.9
+
+    with pytest.raises(ValueError, match="corr"):
+        fam.stream(jax.random.PRNGKey(0), 2, corr=1.0)
+
+
+def test_gauss_markov_stream_serves_through_loadgen():
+    """The correlated stream is a drop-in workload for the serving stack:
+    every request answered and feasible through the virtual-clock DES."""
+    from repro.serve import AllocService, BatchPolicy, ServeConfig, run_load
+
+    requests = get_family("gauss_markov").stream(
+        jax.random.PRNGKey(8), 6, sizes=((3, 8), (4, 8))
+    )
+    service = AllocService(
+        ServeConfig(
+            policy=BatchPolicy(max_batch=2, max_wait_s=0.01), allocator=PGD_CFG
+        )
+    )
+    result = run_load(service, requests, [0.0] * len(requests))
+    assert len(result.completions) == len(requests)
+    for c in result.completions:
+        assert bool(feasible(requests[c.req_id], c.alloc))
+
+
+# ---------------------------------------------------------------------------
+# hetero_classes specifics
+# ---------------------------------------------------------------------------
+
+
+def test_hetero_classes_tiers_from_registry():
+    classes = build_classes()
+    assert len(classes) == 3
+    # tiers ordered by model size: compute need, CPU and radio all ascend
+    assert classes[0].c_cycles == pytest.approx(1e4)
+    assert all(a.c_cycles < b.c_cycles for a, b in zip(classes, classes[1:]))
+    assert all(a.f_max_hz < b.f_max_hz for a, b in zip(classes, classes[1:]))
+    assert all(a.p_max_dbm < b.p_max_dbm for a, b in zip(classes, classes[1:]))
+
+    p = get_family("hetero_classes").sample(jax.random.PRNGKey(12), N=16, K=32)
+    # every drawn f_max/p_max is one of the class tiers
+    assert set(np.asarray(p.f_max).tolist()) <= {c.f_max_hz for c in classes}
+    tiers = np.asarray([c.p_max_w for c in classes])
+    drawn = np.asarray(p.p_max, dtype=np.float64)
+    assert np.all(np.min(np.abs(drawn[:, None] - tiers[None, :]), axis=1) < 1e-6)
+
+    with pytest.raises(ValueError, match="n_classes"):
+        build_classes(0)

@@ -318,3 +318,47 @@ def test_driver_refit_requires_learner():
     with RealClockDriver(service) as driver:
         with pytest.raises(RuntimeError, match="LadderLearner"):
             driver.refit()
+
+
+def test_driver_auto_refit_on_shape_mix_drift():
+    """PR-5 leftover closed: with `refit_waste_threshold` set, the solver
+    thread itself notices the observed mix's padded waste under the current
+    ladder and refits — no caller hook. The seed-7 smoke mix (six (4,8), two
+    (3,8)) wastes ~6.7% under DEFAULT_BUCKETS' (4,8) bucket, so a 5%
+    threshold trips and the refit ladder (which includes a (3,8) bucket)
+    drops it to zero; answers stay correct because padding is
+    answer-transparent."""
+    requests = _stream(8)
+    service = AllocService(CFG)
+    service.warmup(requests)
+    driver = RealClockDriver(
+        service,
+        cfg=DriverConfig(
+            refit_waste_threshold=0.05, refit_check_every=4, refit_min_samples=4
+        ),
+        ladder=LadderLearner(min_samples=1),
+    )
+    with driver:
+        done = [f.result(timeout=WAIT_S) for f in (driver.submit(p) for p in requests)]
+    assert driver.auto_refits >= 1
+    assert driver.summary()["auto_refits"] == driver.auto_refits
+    # the swapped ladder serves the observed mix with zero waste...
+    assert service.cfg.buckets != DEFAULT_BUCKETS
+    assert padded_area_waste(
+        [(p.N, p.K) for p in requests], service.cfg.buckets
+    ) == 0.0
+    # ...and every answer is still the request's own exact-shape allocation
+    for c, p in zip(sorted(done, key=lambda c: c.req_id), requests):
+        assert c.alloc.P.shape == (p.N, p.K)
+
+
+def test_driver_auto_refit_disabled_by_default():
+    """No threshold (the default) => the driver never refits on its own,
+    even with a learner attached — existing callers keep manual control."""
+    requests = _stream(6)
+    service = AllocService(CFG)
+    service.warmup(requests)
+    with RealClockDriver(service, ladder=LadderLearner(min_samples=1)) as driver:
+        [f.result(timeout=WAIT_S) for f in (driver.submit(p) for p in requests)]
+    assert driver.auto_refits == 0
+    assert service.cfg.buckets == DEFAULT_BUCKETS
