@@ -1,0 +1,165 @@
+"""Closed-loop FedSem benchmark: concurrent FL jobs over the live allocation
+service (the `repro.launch.fedsem_e2e` harness, recorded as BENCH rows).
+
+Phases (shared compiled-executable cache, see the harness docstring):
+backend equivalence (PlannedBackend == virtual-clock ServiceBackend, exact
+hardened X), the A(rho) feedback loop (a refit from the job's own
+proxy-accuracy measurements must be applied and stay monotone), then J
+concurrent heterogeneous FL jobs sharing one `RealClockDriver`. Rows record
+every job's fig8-style per-round accuracy/energy trajectory plus the
+service-side latency/occupancy summary under FL load.
+
+Writes ``BENCH_fedsem.json`` at the repo root (full run) so future PRs have
+a closed-loop trajectory; ``--smoke`` writes
+``experiments/bench/BENCH_fedsem_smoke.json`` with a tiny autoencoder and a
+reduced allocator for CI.
+
+Exit status gates ONLY the deterministic claims (equivalence, refit
+monotonicity, every job finishing every round): throughput/occupancy
+observations are informational ``perf_checks`` — a loaded CI box must not
+fail an unrelated PR (the bench_serve convention).
+
+  PYTHONPATH=src python -m benchmarks.bench_fedsem            # full, root JSON
+  PYTHONPATH=src python -m benchmarks.bench_fedsem --smoke    # CI-sized
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import platform
+
+import jax
+
+from repro.core import tree_bits
+from repro.launch.fedsem_e2e import (
+    check_backend_equivalence,
+    harness_config,
+    make_job,
+    run_multijob,
+    run_refit_loop,
+    trajectory,
+)
+from repro.semcom import init_params
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+OUT_JSON = ROOT / "BENCH_fedsem.json"
+# smoke runs use a reduced allocator + tiny AE — methodologically different
+# numbers must not clobber the committed full-run trajectory file
+OUT_JSON_SMOKE = ROOT / "experiments" / "bench" / "BENCH_fedsem_smoke.json"
+
+
+def run(quick: bool = False, seed: int = 0, smoke: bool | None = None):
+    smoke = quick if smoke is None else smoke
+    allocator, serve_cfg, specs, rounds, ae, batch, eval_batch = harness_config(
+        smoke, rounds=None, jobs=None
+    )
+    key = jax.random.PRNGKey(seed)
+    executables: dict = {}
+
+    probe = make_job(specs[0], rounds, ae, batch, eval_batch)
+    d_bits = tree_bits(init_params(jax.random.PRNGKey(0), probe.ae))
+    eq = check_backend_equivalence(
+        jax.random.fold_in(key, 100), probe.cfg.fl, allocator, serve_cfg,
+        d_bits, executables,
+    )
+    _, refit = run_refit_loop(
+        jax.random.fold_in(key, 200),
+        make_job(specs[0], rounds, ae, batch, eval_batch),
+        serve_cfg, executables,
+    )
+    jobs = [make_job(s, rounds, ae, batch, eval_batch) for s in specs]
+    results, summary = run_multijob(
+        jax.random.fold_in(key, 300), jobs, serve_cfg, executables
+    )
+
+    # one row per (job, round): the multi-job accuracy/energy trajectory
+    rows = []
+    for spec, res in zip(specs, results):
+        traj = trajectory(res)
+        for rnd in range(traj["rounds"]):
+            rows.append(
+                {
+                    "job": res.name,
+                    "scenario": spec[1],
+                    "n_clients": spec[2],
+                    "n_subcarriers": spec[3],
+                    "round": rnd,
+                    "loss": traj["loss"][rnd],
+                    "rho": traj["rho"][rnd],
+                    "energy": traj["energy"][rnd],
+                    "t_fl": traj["t_fl"][rnd],
+                    "objective": traj["objective"][rnd],
+                }
+            )
+    # plus the service-side view of the same load: latency + occupancy
+    service_row = {
+        "jobs": len(results),
+        "rounds": rounds,
+        "requests": summary.get("completed"),
+        "latency_p50_s": summary.get("latency_p50_s"),
+        "latency_p95_s": summary.get("latency_p95_s"),
+        "batch_occupancy_mean": summary.get("batch_occupancy_mean"),
+        "mean_batch_size": summary.get("mean_batch_size"),
+        "cache_hit_rate": summary.get("cache_hit_rate"),
+    }
+
+    completed = all(len(r.history) == rounds for r in results)
+    checks = {
+        "service_backend_matches_planned": eq["equivalent"],
+        "refit_applied_and_monotone": refit["ok"],
+        "all_jobs_completed_all_rounds": completed,
+        "every_round_allocated": all(0.0 < r["rho"] <= 1.0 for r in rows),
+        "service_latency_recorded": bool(
+            summary.get("latency_p95_s", 0) >= summary.get("latency_p50_s", 0) > 0
+        ),
+    }
+    perf_checks = {
+        # co-batching across concurrent jobs is timing-dependent (jobs drift
+        # apart as their training speeds differ) — observed, never gating
+        "concurrent_rounds_co_batched": summary.get("mean_batch_size", 0) > 1.0,
+        "training_reduced_loss_somewhere": any(
+            r.history[-1].loss < r.history[0].loss for r in results
+        ),
+    }
+
+    result = {
+        "specs": [list(s) for s in specs],
+        "rounds": rounds,
+        "inner": allocator.inner,
+        "smoke": smoke,
+        "equivalence": eq,
+        "refit": refit,
+        "rows": rows,
+        "service": service_row,
+        "checks": checks,
+        "perf_checks": perf_checks,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "jax_version": jax.__version__,
+        "python_version": platform.python_version(),
+        "platform": platform.platform(),
+    }
+    out = OUT_JSON_SMOKE if smoke else OUT_JSON
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(result, indent=2) + "\n")
+    return rows, checks, perf_checks
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="tiny CI-sized run")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    rows, checks, perf_checks = run(smoke=args.smoke, seed=args.seed)
+    for r in rows:
+        print(
+            f"{r['job']:>8} [{r['scenario']:>14}] round {r['round']} "
+            f"loss={r['loss']:.4f} rho={r['rho']:.3f} "
+            f"E={r['energy']:.3f}J t={r['t_fl']:.3f}s"
+        )
+    print("checks (gating):", checks)
+    print("perf checks (informational):", perf_checks)
+    sys.exit(0 if all(v is not False for v in checks.values()) else 1)

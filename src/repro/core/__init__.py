@@ -1,5 +1,6 @@
 """FedSem core: the paper's resource-allocation contribution in JAX."""
 from .accuracy import AccuracyFn, default_accuracy, fit_power_law
+from .bits import tree_bits
 from .allocator import (
     AllocatorConfig, AllocatorResult, sharded_batch_solver, solve, solve_batch,
 )
@@ -16,7 +17,7 @@ from .types import (
 )
 
 __all__ = [
-    "AccuracyFn", "default_accuracy", "fit_power_law",
+    "AccuracyFn", "default_accuracy", "fit_power_law", "tree_bits",
     "AllocatorConfig", "AllocatorResult", "solve", "solve_batch",
     "sharded_batch_solver",
     "sample_params", "sample_params_batch", "sample_request_stream",

@@ -1,0 +1,21 @@
+"""Upload-size accounting shared by the FL driver and the SemCom codec.
+
+The allocator's D_n (bits a client uploads per round) must mean the same
+thing wherever it is computed — `fl.federated` sizing the sparsified update
+and `semcom.autoencoder` sizing the codec parameters used to diverge by
+construction (two copies of the same expression). Both now delegate here.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def tree_bits(tree, bits_per_param: int = 32) -> float:
+    """Total size of a pytree's leaves in bits (float32 by default).
+
+    This is the FL upload size D_n the allocator prices: every leaf entry
+    costs ``bits_per_param`` bits on the uplink.
+    """
+    return float(
+        sum(x.size for x in jax.tree_util.tree_leaves(tree)) * bits_per_param
+    )

@@ -1,1 +1,17 @@
-"""repro.fl"""
+"""repro.fl: the FL substrate, its pluggable allocation backends, and the
+closed-loop SemCom training job."""
+from .alloc_backend import (
+    AllocationBackend, PlannedBackend, ServiceBackend, serve_config_for,
+)
+from .federated import (
+    FLConfig, RoundStats, plan_allocations, round_channel_key, run_fl,
+    sample_round_scenarios, topk_sparsify, tree_bits,
+)
+from .semcom_job import SemComJob, SemComJobConfig, SemComJobResult
+
+__all__ = [
+    "AllocationBackend", "PlannedBackend", "ServiceBackend", "serve_config_for",
+    "FLConfig", "RoundStats", "plan_allocations", "round_channel_key",
+    "run_fl", "sample_round_scenarios", "topk_sparsify", "tree_bits",
+    "SemComJob", "SemComJobConfig", "SemComJobResult",
+]

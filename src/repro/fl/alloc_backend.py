@@ -1,0 +1,161 @@
+"""Pluggable allocation backends: where `run_fl` gets each round's resources.
+
+The FL driver used to hard-code the offline path — one batched `solve_batch`
+over every round's pre-sampled scenario before training starts. That path is
+now `PlannedBackend` (bit-identical, regression-tested); `ServiceBackend`
+instead submits each round's `SystemParams` to the live serving stack
+(`AllocService` on a virtual clock, or a `RealClockDriver` / its asyncio
+facade) and blocks on the answer, which is how many concurrent FL jobs share
+one allocation service and how a job's re-fit A(rho) can steer its own later
+rounds (`repro.fl.semcom_job`).
+
+Equivalence spine (tests/test_fl_backend.py, `fedsem_e2e --smoke`): for the
+same round scenarios and the same `AllocatorConfig`, `ServiceBackend` over
+the virtual-clock service returns the EXACT hardened assignment X that
+`PlannedBackend` computes — padding into shape buckets and co-batching are
+answer-transparent (docs/ARCHITECTURE.md guarantee table), so routing the FL
+loop through the service changes scheduling, never answers.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.core import (
+    Allocation,
+    AllocatorConfig,
+    AllocatorResult,
+    SystemParams,
+    Weights,
+    solve_batch,
+    stack_params,
+    tree_index,
+)
+from repro.serve.driver import RealClockDriver
+from repro.serve.service import AllocService, ServeConfig
+
+
+class AllocationBackend:
+    """Protocol for `run_fl`'s per-round allocation source.
+
+    Lifecycle: `open(scenarios, weights)` once with every round's
+    `SystemParams` (the FL driver samples them, so all backends price
+    identical channels), `allocate(rnd)` per round (blocking until the
+    round's `Allocation` is available), `close()` when the run ends.
+
+    `close` releases only what the backend itself created — externally
+    provided services/drivers stay up, so one driver can serve many jobs.
+    `set_accuracy` offers a re-fit A(rho) model for later rounds and returns
+    whether it took effect; `supports_accuracy_feedback` advertises the
+    answer up front (the offline planner solved everything already and must
+    decline, the live service re-solves each round and accepts).
+    """
+
+    supports_accuracy_feedback: bool = False
+
+    def open(self, scenarios: Sequence[SystemParams], weights: Weights) -> None:
+        raise NotImplementedError
+
+    def allocate(self, rnd: int) -> Allocation:
+        raise NotImplementedError
+
+    def set_accuracy(self, acc) -> bool:
+        return False
+
+    def close(self) -> None:
+        pass
+
+
+class PlannedBackend(AllocationBackend):
+    """Today's offline path: one batched, jitted solve for every round before
+    training starts (`repro.core.solve_batch` — one trace/compile per run).
+
+    `fl.federated.plan_allocations` is a thin wrapper over this class; the
+    batched result is exposed as ``sys_batch`` / ``result`` for callers that
+    want the whole plan (fig8 benchmark, regression tests).
+    """
+
+    supports_accuracy_feedback = False
+
+    def __init__(
+        self,
+        allocator: AllocatorConfig = AllocatorConfig(inner="pgd"),
+        accuracy=None,
+    ):
+        self.allocator = allocator
+        self.accuracy = accuracy
+        self.sys_batch: SystemParams | None = None
+        self.result: AllocatorResult | None = None
+
+    def open(self, scenarios: Sequence[SystemParams], weights: Weights) -> None:
+        self.sys_batch = stack_params(list(scenarios))
+        self.result = solve_batch(
+            self.sys_batch, weights, self.allocator, self.accuracy
+        )
+
+    def allocate(self, rnd: int) -> Allocation:
+        return tree_index(self.result.alloc, rnd)
+
+
+class ServiceBackend(AllocationBackend):
+    """Round allocations served by the live allocation stack.
+
+    ``target`` is either:
+
+    * an `AllocService` — sans-IO virtual-clock mode: each round is admitted
+      at virtual time ``rnd`` and drained immediately (a batch of one, which
+      co-batching transparency makes answer-identical to any fill level).
+      Single-tenant only — `drain` flushes every queue, so don't point two
+      jobs at one bare service; share a driver instead.
+    * a `RealClockDriver` — ``submit`` returns a future, `allocate` blocks
+      on it; many jobs (threads) share one driver and their rounds co-batch
+      inside the service's micro-batcher.
+    * a `repro.serve.aio.AsyncAllocDriver` — the asyncio facade is unwrapped
+      to its underlying driver (this backend is sync; async callers can also
+      await the facade directly and skip `run_fl`).
+
+    The target is borrowed, never owned: `close` leaves it running.
+    """
+
+    supports_accuracy_feedback = True
+
+    def __init__(self, target, *, timeout_s: float = 600.0):
+        target = getattr(target, "driver", target)  # unwrap the asyncio facade
+        if isinstance(target, RealClockDriver):
+            self._driver: RealClockDriver | None = target
+            self._service = target.service
+        elif isinstance(target, AllocService):
+            self._driver = None
+            self._service = target
+        else:
+            raise TypeError(
+                "ServiceBackend target must be an AllocService, a "
+                f"RealClockDriver or an AsyncAllocDriver, got {type(target)!r}"
+            )
+        self._timeout_s = timeout_s
+        self._scenarios: list[SystemParams] = []
+        self._weights: Weights | None = None
+
+    def open(self, scenarios: Sequence[SystemParams], weights: Weights) -> None:
+        self._scenarios = list(scenarios)
+        self._weights = weights
+
+    def allocate(self, rnd: int) -> Allocation:
+        params = self._scenarios[rnd]
+        if self._driver is not None:
+            fut = self._driver.submit(params, self._weights)
+            return fut.result(timeout=self._timeout_s).alloc
+        req_id = self._service.submit(params, self._weights, now=float(rnd))
+        done, _ = self._service.drain(now=float(rnd))
+        return next(c.alloc for c in done if c.req_id == req_id)
+
+    def set_accuracy(self, acc) -> bool:
+        self._service.set_accuracy(acc)
+        return True
+
+
+def serve_config_for(allocator: AllocatorConfig, **overrides) -> ServeConfig:
+    """A `ServeConfig` whose solver matches an FL run's `AllocatorConfig` —
+    the precondition for the ServiceBackend == PlannedBackend hardened-X
+    guarantee (the executable cache keys on the config, so a mismatched
+    service would solve the same scenario with a different algorithm)."""
+    return ServeConfig(allocator=allocator, **overrides)

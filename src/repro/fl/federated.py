@@ -2,19 +2,28 @@
 
 All rounds' wireless scenarios are pre-sampled (block fading is i.i.d.
 across rounds, paper §III) with per-client upload size D_n = rho-compressed
-update bits and compute c_n d_n taken from the *actual* model being trained,
-and Alg. A2 allocates subcarriers / powers / CPU frequencies / the
-compression rate rho for *every* round in one batched, jitted call
-(`repro.core.solve_batch`) before training starts — the per-round Python
-loop used to re-trace `solve` each round. Then, per FL round:
+update bits and compute c_n d_n taken from the *actual* model being trained.
+WHERE each round's allocation comes from is pluggable (`repro.fl.alloc_backend`):
+
+  * `PlannedBackend` (default) — Alg. A2 allocates subcarriers / powers /
+    CPU frequencies / rho for *every* round in one batched, jitted call
+    (`repro.core.solve_batch`) before training starts;
+  * `ServiceBackend` — each round's `SystemParams` is submitted to the live
+    serving stack (`AllocService` / `RealClockDriver`) and the round blocks
+    on its answer, so concurrent FL jobs share one allocation service.
+
+Then, per FL round:
   1. every client runs `local_steps` of SGD on its shard (vmapped across
      clients), uploads a top-|rho| sparsified update (the LM-world analogue of
      the paper's semantic compression — DESIGN.md §5), and the server
      aggregates with FedAvg weights d_n;
-  2. the round's energy/delay are computed from the round's pre-solved
-     allocation via the system model and accumulated into the history.
+  2. the round's energy/delay are computed from the round's allocation via
+     the system model and accumulated into the history.
 
 The driver is model-agnostic: pass any (init_params, loss_fn, batch_stream).
+With ``cfg.rho_in_loss`` the loss also receives the round's solved rho as a
+traced scalar — how the SemCom job reconfigures its bottleneck per round
+without retracing (`repro.fl.semcom_job`).
 """
 from __future__ import annotations
 
@@ -22,18 +31,16 @@ from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import (
     AllocatorConfig,
     AllocatorResult,
     SystemParams,
     Weights,
-    solve_batch,
-    stack_params,
-    tree_index,
+    tree_bits,
 )
 from repro.core.system import report
+from repro.fl.alloc_backend import AllocationBackend, PlannedBackend
 from repro.optim.optimizers import sgd
 from repro.scenarios import get_family
 
@@ -49,6 +56,9 @@ class FLConfig(NamedTuple):
     compress: bool = True          # top-|rho| update sparsification
     scenario: str = "iid_rayleigh"  # registered scenario family for channels
     seed: int = 0
+    #: call the loss as ``loss_fn(params, batch, key, rho)`` with the round's
+    #: solved rho as a traced scalar (rho-aware models, e.g. the SemCom codec)
+    rho_in_loss: bool = False
 
 
 class RoundStats(NamedTuple):
@@ -66,20 +76,15 @@ def round_channel_key(key: jax.Array, rnd: int) -> jax.Array:
     return jax.random.split(jax.random.fold_in(key, rnd), 3)[0]
 
 
-def plan_allocations(
-    key: jax.Array, cfg: FLConfig, d_bits: float, weights: Weights
-) -> tuple[SystemParams, AllocatorResult]:
-    """Pre-sample every round's scenario and solve all allocations at once.
-
-    Returns the batch-stacked ``SystemParams`` (leading axis = round) and the
-    batched `AllocatorResult` from a single `solve_batch` call — one trace /
-    compile for the whole FL run instead of one per round.
-
-    Channels come from the `cfg.scenario` registry family; the default
-    (``iid_rayleigh``) draws bit-identically to the pre-registry sampler.
-    """
+def sample_round_scenarios(
+    key: jax.Array, cfg: FLConfig, d_bits: float
+) -> list[SystemParams]:
+    """Pre-sample every round's wireless scenario from the `cfg.scenario`
+    registry family (the default, ``iid_rayleigh``, draws bit-identically to
+    the pre-registry sampler). Sampling lives in the FL driver — not in the
+    backends — so every backend prices identical channels for a given key."""
     family = get_family(cfg.scenario)
-    scenarios = [
+    return [
         family.sample(
             round_channel_key(key, rnd),
             N=cfg.n_clients,
@@ -88,11 +93,22 @@ def plan_allocations(
         )
         for rnd in range(cfg.rounds)
     ]
-    sys_batch = stack_params(scenarios)
-    res = solve_batch(
-        sys_batch, weights, AllocatorConfig(inner=cfg.allocator_inner)
-    )
-    return sys_batch, res
+
+
+def plan_allocations(
+    key: jax.Array, cfg: FLConfig, d_bits: float, weights: Weights
+) -> tuple[SystemParams, AllocatorResult]:
+    """Pre-sample every round's scenario and solve all allocations at once.
+
+    Returns the batch-stacked ``SystemParams`` (leading axis = round) and the
+    batched `AllocatorResult` from a single `solve_batch` call — one trace /
+    compile for the whole FL run instead of one per round. This is
+    `PlannedBackend`'s plan, exposed whole for callers that want it
+    (fig8 benchmark, regression tests).
+    """
+    backend = PlannedBackend(AllocatorConfig(inner=cfg.allocator_inner))
+    backend.open(sample_round_scenarios(key, cfg, d_bits), weights)
+    return backend.sys_batch, backend.result
 
 
 def topk_sparsify(update, frac):
@@ -108,33 +124,41 @@ def topk_sparsify(update, frac):
     return jax.tree.map(leaf_q, update)
 
 
-def tree_bits(tree) -> float:
-    return float(sum(x.size for x in jax.tree_util.tree_leaves(tree)) * 32)
-
-
 def run_fl(
     key: jax.Array,
     init_params,
-    loss_fn: Callable,            # loss_fn(params, batch, key) -> scalar
+    loss_fn: Callable,            # loss_fn(params, batch, key[, rho]) -> scalar
     client_batch_fn: Callable,    # client_batch_fn(key, client_idx) -> batch
     cfg: FLConfig = FLConfig(),
     flops_per_sample: float = 1e6,
+    backend: AllocationBackend | None = None,
+    round_hook: Callable | None = None,
 ):
-    """Run FL with per-round wireless resource allocation. Returns history."""
+    """Run FL with per-round wireless resource allocation. Returns history.
+
+    ``backend`` chooses the allocation source (default: a fresh
+    `PlannedBackend` matching the pre-refactor behaviour exactly).
+    ``round_hook(rnd, params, alloc, stats)`` runs after each round's
+    aggregation — the hook a `SemComJob` uses to measure proxy accuracy at
+    the round's rho and push an A(rho) refit back into a live backend.
+    """
     params = init_params
     opt_init, opt_update = sgd(cfg.lr)
     w = Weights(*map(jnp.float32, cfg.kappa))
     d_bits = tree_bits(params)
 
     @jax.jit
-    def local_train(params, batches, key):
+    def local_train(params, batches, key, rho):
         """One client: `local_steps` SGD steps. batches: (steps, ...)."""
         state = opt_init(params)
 
         def step(carry, xs):
             p, s = carry
             batch, k = xs
-            loss, g = jax.value_and_grad(loss_fn)(p, batch, k)
+            if cfg.rho_in_loss:
+                loss, g = jax.value_and_grad(loss_fn)(p, batch, k, rho)
+            else:
+                loss, g = jax.value_and_grad(loss_fn)(p, batch, k)
             p, s = opt_update(g, s, p)
             return (p, s), loss
 
@@ -143,45 +167,60 @@ def run_fl(
         delta = jax.tree.map(lambda a, b: a - b, p, params)
         return delta, jnp.mean(losses)
 
-    multi_train = jax.jit(jax.vmap(local_train, in_axes=(None, 0, 0)))
+    multi_train = jax.jit(jax.vmap(local_train, in_axes=(None, 0, 0, None)))
 
-    # --- resource allocation for ALL rounds in one batched solve (paper core)
-    sys_batch, batch_res = plan_allocations(key, cfg, d_bits, w)
+    # --- resource allocation (paper core): sample every round's scenario,
+    # then let the backend answer them — in one offline batched solve
+    # (PlannedBackend) or round-by-round through the live service
+    scenarios = sample_round_scenarios(key, cfg, d_bits)
+    if backend is None:
+        backend = PlannedBackend(AllocatorConfig(inner=cfg.allocator_inner))
+    backend.open(scenarios, w)
 
     history: list[RoundStats] = []
-    for rnd in range(cfg.rounds):
-        k_round = jax.random.fold_in(key, rnd)
-        _, k_data, k_train = jax.random.split(k_round, 3)
+    try:
+        for rnd in range(cfg.rounds):
+            k_round = jax.random.fold_in(key, rnd)
+            _, k_data, k_train = jax.random.split(k_round, 3)
 
-        sys_params = tree_index(sys_batch, rnd)
-        alloc = tree_index(batch_res.alloc, rnd)
-        rho = float(alloc.rho)
-        stats = report(sys_params, w, alloc)
+            sys_params = scenarios[rnd]
+            alloc = backend.allocate(rnd)
+            rho = float(alloc.rho)
+            stats = report(sys_params, w, alloc)
 
-        # --- local training (vmapped over clients) ---
-        batches = jax.vmap(
-            lambda i: jax.vmap(
-                lambda s: client_batch_fn(jax.random.fold_in(k_data, i * 1000 + s), i)
-            )(jnp.arange(cfg.local_steps))
-        )(jnp.arange(cfg.n_clients))
-        deltas, losses = multi_train(
-            params, batches, jax.random.split(k_train, cfg.n_clients)
-        )
-
-        # --- rho-compressed upload + FedAvg ---
-        if cfg.compress:
-            deltas = jax.vmap(lambda d: topk_sparsify(d, rho))(deltas)
-        agg = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
-        params = jax.tree.map(lambda p, d: p + d, params, agg)
-
-        history.append(
-            RoundStats(
-                loss=float(jnp.mean(losses)),
-                rho=rho,
-                energy=float(stats["energy_total"]),
-                t_fl=float(stats["t_fl"]),
-                objective=float(stats["objective"]),
-                upload_bits=rho * d_bits * cfg.n_clients,
+            # --- local training (vmapped over clients) ---
+            batches = jax.vmap(
+                lambda i: jax.vmap(
+                    lambda s: client_batch_fn(
+                        jax.random.fold_in(k_data, i * 1000 + s), i
+                    )
+                )(jnp.arange(cfg.local_steps))
+            )(jnp.arange(cfg.n_clients))
+            deltas, losses = multi_train(
+                params,
+                batches,
+                jax.random.split(k_train, cfg.n_clients),
+                jnp.float32(rho),
             )
-        )
+
+            # --- rho-compressed upload + FedAvg ---
+            if cfg.compress:
+                deltas = jax.vmap(lambda d: topk_sparsify(d, rho))(deltas)
+            agg = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
+            params = jax.tree.map(lambda p, d: p + d, params, agg)
+
+            history.append(
+                RoundStats(
+                    loss=float(jnp.mean(losses)),
+                    rho=rho,
+                    energy=float(stats["energy_total"]),
+                    t_fl=float(stats["t_fl"]),
+                    objective=float(stats["objective"]),
+                    upload_bits=rho * d_bits * cfg.n_clients,
+                )
+            )
+            if round_hook is not None:
+                round_hook(rnd, params, alloc, history[-1])
+    finally:
+        backend.close()
     return params, history

@@ -19,6 +19,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.bits import tree_bits
+
 
 class AEConfig(NamedTuple):
     image_size: int = 32
@@ -127,6 +129,92 @@ def proxy_accuracy(params, cfg: AEConfig, x, key=None,
 
 def param_bits(params) -> float:
     """Upload size D_n in bits (float32) — feeds the allocator."""
-    return float(
-        sum(x.size for x in jax.tree_util.tree_leaves(params)) * 32
+    return tree_bits(params)
+
+
+# -- runtime-rho codec --------------------------------------------------------
+#
+# `AEConfig.rho` bakes the bottleneck into the parameter SHAPES (enc3/dec1 are
+# built with `latent_channels` filters), so a per-round solved rho would force
+# a parameter reshape mid-FL-run. The `_rho` family below keeps the parameters
+# at the rho = 1 shape (`base_latent` channels) and applies rho at RUNTIME: a
+# channel mask zeroes all but the first ceil(rho * base_latent) latent
+# channels, and the paper's extra 2x2 pooling stage for rho <= 0.5 stays a
+# static python branch (`extra_pool`) because it changes intermediate shapes.
+# `repro.fl.semcom_job` selects the branch with `jax.lax.cond` per round.
+
+
+def latent_mask(cfg: AEConfig, rho) -> jax.Array:
+    """(base_latent,) 0/1 mask keeping ceil(rho * base_latent) channels
+    (at least one). ``rho`` may be traced — the mask is where the solved
+    compression rate enters the codec without touching parameter shapes."""
+    keep = jnp.clip(
+        jnp.ceil(jnp.asarray(rho, jnp.float32) * cfg.base_latent),
+        1.0,
+        float(cfg.base_latent),
     )
+    return (jnp.arange(cfg.base_latent) < keep).astype(jnp.float32)
+
+
+def encode_rho(params, cfg: AEConfig, x, rho, extra_pool: bool):
+    """`encode` with a runtime rho: params must be the rho = 1 shape
+    (``AEConfig(rho=1)`` / `base_latent` channels); ``extra_pool`` is the
+    static pooling-depth branch (True for rho <= 0.5)."""
+    h = jnp.tanh(_conv(x, params["enc1"]))
+    h = _pool(jnp.tanh(_conv(h, params["enc2"])))
+    if extra_pool:
+        h = _pool(h)
+    return jnp.tanh(_conv(h, params["enc3"])) * latent_mask(cfg, rho)
+
+
+def decode_rho(params, cfg: AEConfig, z, extra_pool: bool):
+    h = jnp.tanh(_conv(z, params["dec1"]))
+    if extra_pool:
+        h = _upsample(h)
+    h = _upsample(jnp.tanh(_conv(h, params["dec2"])))
+    return jnp.tanh(_conv(h, params["dec3"]))
+
+
+def forward_rho(params, cfg: AEConfig, x, rho, key=None,
+                extra_pool: bool | None = None):
+    """Full codec pass at a runtime compression rate.
+
+    ``extra_pool`` defaults from a concrete ``rho`` (<= 0.5, matching
+    `AEConfig.extra_pool`); pass it explicitly when ``rho`` is traced.
+    """
+    if extra_pool is None:
+        extra_pool = float(rho) <= 0.5
+    z = encode_rho(params, cfg, x, rho, extra_pool)
+    if key is not None:
+        z = z + cfg.noise_std * jax.random.normal(key, z.shape)
+    return decode_rho(params, cfg, z, extra_pool)
+
+
+def mse_loss_rho(params, cfg: AEConfig, x, rho, key=None,
+                 extra_pool: bool | None = None):
+    return jnp.mean(
+        jnp.square(forward_rho(params, cfg, x, rho, key, extra_pool) - x)
+    )
+
+
+def proxy_accuracy_rho(params, cfg: AEConfig, x, rho, key=None,
+                       extra_pool: bool | None = None,
+                       lo: float = 8.0, hi: float = 28.0,
+                       peak: float = 2.0):
+    """`proxy_accuracy` evaluated through the runtime-rho codec — the per-round
+    A(rho) measurement a `SemComJob` accumulates for the refit."""
+    m = mse_loss_rho(params, cfg, x, rho, key, extra_pool)
+    p = 10.0 * jnp.log10(peak**2 / jnp.maximum(m, 1e-12))
+    return jnp.clip((p - lo) / (hi - lo), 0.0, 1.0)
+
+
+def compressed_bits_rho(cfg: AEConfig, rho: float) -> float:
+    """Transmitted-latent bits at a runtime rho under the masked bottleneck.
+
+    Agrees with ``AEConfig(rho=r).compressed_bits`` for every r: the mask
+    keeps ceil(rho * base_latent) channels and rho <= 0.5 adds the pooling
+    stage, exactly as the shape-baked config would.
+    """
+    s = cfg.image_size // (4 if rho <= 0.5 else 2)
+    lat = max(1, min(cfg.base_latent, math.ceil(rho * cfg.base_latent)))
+    return float(s * s * lat * 32)

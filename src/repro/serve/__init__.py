@@ -21,6 +21,7 @@ asserted respectively in `tests/test_serve_alloc.py`,
 `tests/test_distribute.py`, `tests/test_kernels.py` and
 `tests/test_serve_driver.py`.
 """
+from .aio import AsyncAllocDriver
 from .batching import BatchPolicy, MicroBatcher, PendingRequest
 from .driver import (
     AdmissionQueueFull, DriverClosed, DriverConfig, RealClockDriver,
@@ -38,6 +39,7 @@ __all__ = [
     "BatchPolicy", "MicroBatcher", "PendingRequest",
     "ServiceMetrics", "Reservoir", "percentile",
     "LoadResult", "poisson_arrivals", "run_load", "scenario_stream",
+    "AsyncAllocDriver",
     "RealClockDriver", "DriverConfig", "AdmissionQueueFull", "DriverClosed",
     "pace_stream", "same_hardened_assignments",
     "LadderLearner", "LadderSnapshot", "learn_buckets", "padded_area_waste",

@@ -218,6 +218,21 @@ class AllocService:
         flush (old entries stay valid)."""
         self.cfg = self.cfg._replace(buckets=buckets)
 
+    def set_accuracy(self, acc) -> None:
+        """Swap the A(rho) model every subsequent flush solves against (e.g.
+        an `AccuracyFn` re-fit from a SemCom job's own proxy-accuracy
+        measurements — the FedSem feedback edge, `repro.fl.semcom_job`).
+
+        Zero recompiles: the accuracy fit is a runtime argument of every
+        compiled executable, not part of its cache key, so the swap is a
+        single attribute store (atomic under the GIL, same safety argument
+        as `set_buckets`). Already-queued requests solve under the NEW model
+        at their flush — the model is service-global, which is the point
+        (one base station, one accuracy belief) but means co-tenant jobs on
+        a shared driver also see the refit.
+        """
+        self._acc = acc
+
     def pending(self) -> int:
         return self.batcher.depth()
 

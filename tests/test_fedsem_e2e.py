@@ -1,0 +1,129 @@
+"""The closed FedSem loop (`repro.fl.semcom_job`) and the asyncio driver
+facade (`repro.serve.aio`): the autoencoder trains under served allocations,
+the A(rho) refit reaches the service, and the async facade answers exactly
+like the sync driver."""
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AllocatorConfig, Weights
+from repro.core.pgd import PGDConfig
+from repro.fl import (
+    FLConfig,
+    PlannedBackend,
+    SemComJob,
+    SemComJobConfig,
+    ServiceBackend,
+    sample_round_scenarios,
+    serve_config_for,
+)
+from repro.semcom import AEConfig
+from repro.serve import AllocService, AsyncAllocDriver, BatchPolicy, RealClockDriver
+
+ALLOC = AllocatorConfig(inner="pgd", outer_iters=2, pgd=PGDConfig(steps=60))
+SERVE = serve_config_for(ALLOC, policy=BatchPolicy(max_batch=2, max_wait_s=0.01))
+JOB = SemComJobConfig(
+    fl=FLConfig(n_clients=3, n_subcarriers=8, rounds=2, local_steps=2),
+    ae=AEConfig(image_size=16, hidden=4, base_latent=4),
+    batch_size=4,
+    eval_batch=8,
+    refit_after=2,
+)
+
+
+@pytest.fixture(scope="module")
+def executables():
+    return {}
+
+
+def test_semcom_job_closes_the_loop(executables):
+    """AE trained by `run_fl` with served allocations: per-round rho drives
+    the codec, measurements accumulate, and the refit lands in the service."""
+    service = AllocService(SERVE, executables=executables)
+    job = SemComJob(JOB)
+    res = job.run(jax.random.PRNGKey(0), ServiceBackend(service))
+
+    assert len(res.history) == JOB.fl.rounds
+    for h in res.history:
+        assert np.isfinite(h.loss) and 0.0 < h.rho <= 1.0
+        assert h.energy > 0.0 and h.t_fl > 0.0
+    # each round measures the solved rho plus every probe rho
+    assert len(res.measurements) == JOB.fl.rounds * (1 + len(JOB.probe_rhos))
+    assert all(0.0 <= a <= 1.0 for _, a in res.measurements)
+    # the feedback edge: a fit exists, was pushed, and the service holds it
+    assert res.accuracy_fit is not None
+    assert res.refit_applied and res.refit_round is not None
+    assert service._acc is res.accuracy_fit
+    # Assumption 1 survives the refit: monotone nondecreasing on a grid
+    vals = np.asarray(res.accuracy_fit.value(jnp.linspace(0.05, 1.0, 16)))
+    assert np.all(np.diff(vals) >= -1e-7)
+
+
+def test_semcom_job_planned_backend_declines_feedback():
+    job = SemComJob(JOB)
+    res = job.run(jax.random.PRNGKey(0), PlannedBackend(ALLOC))
+    assert len(res.history) == JOB.fl.rounds
+    assert res.accuracy_fit is not None      # measured and fit all the same
+    assert res.refit_applied is False        # but the plan was already solved
+    assert res.refit_round is None
+
+
+def test_semcom_job_feedback_off_never_pushes(executables):
+    service = AllocService(SERVE, executables=executables)
+    default_acc = service._acc
+    job = SemComJob(JOB._replace(feedback=False))
+    res = job.run(jax.random.PRNGKey(0), ServiceBackend(service))
+    assert res.refit_applied is False
+    assert service._acc is default_acc
+
+
+def test_async_facade_matches_sync_driver(executables):
+    """`AsyncAllocDriver` answers request-for-request exactly like the sync
+    driver path (it adds IO plumbing, no policy), and its context manager
+    starts/drains the underlying driver."""
+    fl = JOB.fl
+    scenarios = sample_round_scenarios(jax.random.PRNGKey(9), fl, 1e4)
+
+    service = AllocService(SERVE, executables=executables)
+    service.warmup(scenarios)
+    with RealClockDriver(service) as driver:
+        sync_alloc = [
+            driver.submit(p, Weights.ones()).result(timeout=120.0).alloc
+            for p in scenarios
+        ]
+
+    async def go():
+        svc = AllocService(SERVE, executables=executables)
+        async with AsyncAllocDriver(svc) as facade:
+            out = []
+            for p in scenarios:
+                c = await facade.submit(p, Weights.ones())
+                out.append(c.alloc)
+            return out, facade
+
+    async_alloc, facade = asyncio.run(go())
+    assert facade.driver._closed.is_set()     # __aexit__ drained the driver
+    for a, b in zip(sync_alloc, async_alloc):
+        np.testing.assert_array_equal(np.asarray(a.X), np.asarray(b.X))
+
+
+def test_async_facade_concurrent_submits(executables):
+    """Concurrent coroutines co-batch through one facade and all complete."""
+    fl = JOB.fl
+    scenarios = sample_round_scenarios(jax.random.PRNGKey(11), fl, 1e4)
+    service = AllocService(SERVE, executables=executables)
+    service.warmup(scenarios)
+
+    async def go():
+        async with AsyncAllocDriver(service) as facade:
+            outs = await asyncio.gather(
+                *(facade.submit(p) for p in scenarios)
+            )
+        return outs
+
+    outs = asyncio.run(go())
+    assert len(outs) == len(scenarios)
+    assert sorted(c.req_id for c in outs) == list(range(len(scenarios)))

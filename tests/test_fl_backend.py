@@ -1,0 +1,166 @@
+"""The allocation-backend split (`repro.fl.alloc_backend`): PlannedBackend
+preserves the offline path bit-for-bit, ServiceBackend over the serving stack
+returns the SAME hardened assignments (the new equivalence-table row), and
+`run_fl` is backend-agnostic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AllocatorConfig, Weights, tree_index
+from repro.core.pgd import PGDConfig
+from repro.fl import (
+    FLConfig,
+    PlannedBackend,
+    ServiceBackend,
+    plan_allocations,
+    run_fl,
+    sample_round_scenarios,
+    serve_config_for,
+)
+from repro.serve import AllocService, AsyncAllocDriver, BatchPolicy, RealClockDriver
+
+ALLOC = AllocatorConfig(inner="pgd", outer_iters=2, pgd=PGDConfig(steps=60))
+FL = FLConfig(n_clients=3, n_subcarriers=8, rounds=2, allocator_inner="pgd")
+SERVE = serve_config_for(ALLOC, policy=BatchPolicy(max_batch=2, max_wait_s=0.01))
+D_BITS = 1e4
+
+
+@pytest.fixture(scope="module")
+def scenarios():
+    return sample_round_scenarios(jax.random.PRNGKey(3), FL, D_BITS)
+
+
+@pytest.fixture(scope="module")
+def planned(scenarios):
+    b = PlannedBackend(ALLOC)
+    b.open(scenarios, Weights.ones())
+    return b
+
+
+@pytest.fixture(scope="module")
+def executables():
+    """One compiled-solver cache for every service in this module (the cache
+    key pins allocator + bucket + slots, so sharing is safe)."""
+    return {}
+
+
+def test_planned_backend_is_the_offline_plan(scenarios):
+    """`plan_allocations` (regression-pinned against sequential `solve` in
+    test_batch_allocator) and `PlannedBackend` are the same computation —
+    same full allocator config, same samples, bit-identical plan."""
+    planned = PlannedBackend(AllocatorConfig(inner=FL.allocator_inner))
+    planned.open(scenarios, Weights.ones())
+    sys_batch, res = plan_allocations(
+        jax.random.PRNGKey(3), FL, D_BITS, Weights.ones()
+    )
+    np.testing.assert_array_equal(np.asarray(sys_batch.g), np.asarray(planned.sys_batch.g))
+    for rnd in range(FL.rounds):
+        a, b = tree_index(res.alloc, rnd), planned.allocate(rnd)
+        np.testing.assert_array_equal(np.asarray(a.X), np.asarray(b.X))
+        np.testing.assert_array_equal(np.asarray(a.rho), np.asarray(b.rho))
+
+
+def _assert_matches_planned(backend, scenarios, planned):
+    backend.open(scenarios, Weights.ones())
+    for rnd in range(FL.rounds):
+        a, b = planned.allocate(rnd), backend.allocate(rnd)
+        np.testing.assert_array_equal(np.asarray(a.X), np.asarray(b.X))
+        assert np.allclose(float(a.rho), float(b.rho), atol=1e-6)
+
+
+def test_service_backend_virtual_matches_planned(scenarios, planned, executables):
+    """THE new equivalence row: ServiceBackend over the virtual-clock service
+    == PlannedBackend, exact hardened X per round."""
+    service = AllocService(SERVE, executables=executables)
+    _assert_matches_planned(ServiceBackend(service), scenarios, planned)
+
+
+def test_service_backend_real_driver_matches_planned(scenarios, planned, executables):
+    service = AllocService(SERVE, executables=executables)
+    service.warmup(scenarios)
+    with RealClockDriver(service) as driver:
+        _assert_matches_planned(ServiceBackend(driver), scenarios, planned)
+
+
+def test_service_backend_unwraps_async_facade(executables):
+    service = AllocService(SERVE, executables=executables)
+    facade = AsyncAllocDriver(service)          # not started; unwrap only
+    backend = ServiceBackend(facade)
+    assert backend._driver is facade.driver
+    facade.driver.close()
+
+
+def test_service_backend_rejects_unknown_target():
+    with pytest.raises(TypeError):
+        ServiceBackend(object())
+
+
+def test_accuracy_feedback_contract(scenarios, executables):
+    """PlannedBackend declines a refit (it solved everything up front);
+    ServiceBackend accepts and the service's A(rho) actually changes."""
+    from repro.core import AccuracyFn
+
+    fit = AccuracyFn(jnp.float32(0.5), jnp.float32(0.3))
+    planned = PlannedBackend(ALLOC)
+    assert planned.supports_accuracy_feedback is False
+    assert planned.set_accuracy(fit) is False
+
+    service = AllocService(SERVE, executables=executables)
+    backend = ServiceBackend(service)
+    assert backend.supports_accuracy_feedback is True
+    assert backend.set_accuracy(fit) is True
+    assert service._acc is fit
+
+
+def test_run_fl_backend_agnostic(executables):
+    """Identical histories through the default (planned) path and a
+    ServiceBackend: routing the FL loop through the serving stack changes
+    scheduling, never training."""
+    cfg = FL._replace(rounds=2)
+    p0 = {"w": jnp.zeros((4,))}
+
+    def loss_fn(p, batch, k):
+        return jnp.mean(jnp.square(p["w"] - batch))
+
+    def client_batch(k, i):
+        return jax.random.normal(k, (4,))
+
+    def go(backend):
+        return run_fl(
+            jax.random.PRNGKey(5), p0, loss_fn, client_batch, cfg,
+            backend=backend,
+        )
+
+    p_planned, h_planned = go(PlannedBackend(ALLOC))
+    p_served, h_served = go(
+        ServiceBackend(AllocService(SERVE, executables=executables))
+    )
+    for hp, hs in zip(h_planned, h_served):
+        assert hp.rho == pytest.approx(hs.rho, abs=1e-6)
+        assert hp.loss == pytest.approx(hs.loss, abs=1e-6)
+        # energy reflects the solve's re-solved powers: hardened X is exact
+        # across backends (asserted above) but P carries padded-solve drift,
+        # amplified by the deliberately under-converged smoke allocator
+        assert hp.energy == pytest.approx(hs.energy, rel=0.05)
+    np.testing.assert_allclose(
+        np.asarray(p_planned["w"]), np.asarray(p_served["w"]), atol=1e-6
+    )
+
+
+def test_round_hook_sees_every_round(executables):
+    cfg = FL._replace(rounds=2)
+    p0 = {"w": jnp.zeros((2,))}
+    seen = []
+    run_fl(
+        jax.random.PRNGKey(5), p0,
+        lambda p, b, k: jnp.mean(jnp.square(p["w"] - b)),
+        lambda k, i: jax.random.normal(k, (2,)),
+        cfg,
+        backend=PlannedBackend(ALLOC),
+        round_hook=lambda rnd, params, alloc, stats: seen.append(
+            (rnd, float(alloc.rho), stats.loss)
+        ),
+    )
+    assert [s[0] for s in seen] == [0, 1]
+    assert all(0 < s[1] <= 1.0 for s in seen)

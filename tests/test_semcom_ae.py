@@ -1,0 +1,155 @@
+"""Direct coverage of `repro.semcom.autoencoder`: shape round-trips across
+the extra-pool boundary, payload monotonicity, proxy-accuracy bounds, and the
+runtime-rho (masked-bottleneck) codec's agreement with the shape-baked one."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import image_batch
+from repro.semcom.autoencoder import (
+    AEConfig,
+    compressed_bits_rho,
+    decode,
+    decode_rho,
+    encode,
+    encode_rho,
+    forward,
+    forward_rho,
+    init_params,
+    latent_mask,
+    mse_loss_rho,
+    param_bits,
+    proxy_accuracy,
+    proxy_accuracy_rho,
+)
+
+CFG = AEConfig(image_size=16, hidden=4, base_latent=4)
+
+
+def _x(batch=2, size=16):
+    return image_batch(jax.random.PRNGKey(1), batch, size=size)
+
+
+# ---------------------------------------------------------------------------
+# shape round-trips straddling the extra_pool boundary (rho <= 0.5)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rho", [0.2, 0.5, 0.55, 0.8, 1.0])
+def test_encode_decode_roundtrip_shapes(rho):
+    cfg = CFG._replace(rho=rho)
+    p = init_params(jax.random.PRNGKey(0), cfg)
+    x = _x()
+    z = encode(p, cfg, x)
+    s = cfg.image_size // (4 if cfg.extra_pool else 2)
+    assert z.shape == (2, s, s, cfg.latent_channels)
+    y = decode(p, cfg, z)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+@pytest.mark.parametrize("rho", [0.2, 0.5, 0.55, 1.0])
+def test_runtime_rho_roundtrip_shapes(rho):
+    """The masked-bottleneck codec round-trips at rho = 1 parameter shapes on
+    BOTH sides of the pooling boundary."""
+    p = init_params(jax.random.PRNGKey(0), CFG)
+    x = _x()
+    extra = rho <= 0.5
+    z = encode_rho(p, CFG, x, rho, extra_pool=extra)
+    s = CFG.image_size // (4 if extra else 2)
+    assert z.shape == (2, s, s, CFG.base_latent)   # full channels, masked
+    # masked channels are exactly zero
+    keep = int(np.ceil(rho * CFG.base_latent))
+    assert bool(jnp.all(z[..., keep:] == 0.0))
+    y = decode_rho(p, CFG, z, extra_pool=extra)
+    assert y.shape == x.shape
+    y2 = forward_rho(p, CFG, x, rho, key=jax.random.PRNGKey(2))
+    assert y2.shape == x.shape
+
+
+def test_latent_mask_counts_and_floor():
+    assert float(latent_mask(CFG, 1.0).sum()) == CFG.base_latent
+    assert float(latent_mask(CFG, 0.5).sum()) == np.ceil(0.5 * CFG.base_latent)
+    # at least one channel survives arbitrarily small rho
+    assert float(latent_mask(CFG, 1e-6).sum()) == 1.0
+
+
+def test_forward_rho_matches_forward_at_full_rate():
+    """rho = 1: the mask is all ones and no extra pool — the runtime-rho
+    codec IS the shape-baked one."""
+    p = init_params(jax.random.PRNGKey(0), CFG)
+    x = _x()
+    np.testing.assert_allclose(
+        np.asarray(forward(p, CFG._replace(rho=1.0), x)),
+        np.asarray(forward_rho(p, CFG, x, 1.0)),
+        rtol=1e-6,
+    )
+
+
+# ---------------------------------------------------------------------------
+# payload size: monotone in rho, runtime == shape-baked accounting
+# ---------------------------------------------------------------------------
+
+def test_compressed_bits_monotone_in_rho():
+    grid = np.linspace(0.05, 1.0, 24)
+    bits = [AEConfig(rho=float(r)).compressed_bits for r in grid]
+    assert all(b1 <= b2 for b1, b2 in zip(bits, bits[1:]))
+    # the rho <= 0.5 pooling stage makes the jump at the boundary strict
+    assert AEConfig(rho=0.5).compressed_bits < AEConfig(rho=0.51).compressed_bits
+
+
+@pytest.mark.parametrize("rho", [0.1, 0.25, 0.5, 0.51, 0.75, 1.0])
+def test_compressed_bits_rho_matches_config(rho):
+    assert compressed_bits_rho(CFG, rho) == CFG._replace(rho=rho).compressed_bits
+
+
+# ---------------------------------------------------------------------------
+# proxy accuracy: bounded, degrades with channel noise
+# ---------------------------------------------------------------------------
+
+def test_proxy_accuracy_bounded_and_noise_degrades():
+    p = init_params(jax.random.PRNGKey(0), CFG)
+    x = _x(4)
+    k = jax.random.PRNGKey(3)
+    accs = {}
+    for std in (0.0, 0.1, 3.0):
+        cfg = CFG._replace(noise_std=std)
+        a = float(proxy_accuracy(p, cfg, x, k))
+        assert 0.0 <= a <= 1.0
+        accs[std] = a
+    assert accs[3.0] <= accs[0.1] <= accs[0.0]
+    assert accs[3.0] < accs[0.0]      # a much louder channel must hurt
+
+    # same property through the runtime-rho path
+    a_clean = float(proxy_accuracy_rho(p, CFG._replace(noise_std=0.0), x, 0.75, k))
+    a_noisy = float(proxy_accuracy_rho(p, CFG._replace(noise_std=3.0), x, 0.75, k))
+    assert 0.0 <= a_noisy <= a_clean <= 1.0
+
+
+def test_mse_loss_rho_grad_through_cond():
+    """The per-round loss used by `SemComJob`: traced rho selecting the
+    pooling branch via lax.cond must stay differentiable."""
+    p = init_params(jax.random.PRNGKey(0), CFG)
+    x = _x()
+
+    def loss(p, rho):
+        return jax.lax.cond(
+            rho <= 0.5,
+            lambda: mse_loss_rho(p, CFG, x, rho, extra_pool=True),
+            lambda: mse_loss_rho(p, CFG, x, rho, extra_pool=False),
+        )
+
+    for rho in (0.3, 0.8):
+        g = jax.grad(loss)(p, jnp.float32(rho))
+        flat = jnp.concatenate([v.ravel() for v in jax.tree_util.tree_leaves(g)])
+        assert bool(jnp.all(jnp.isfinite(flat)))
+        assert float(jnp.abs(flat).max()) > 0.0
+
+
+def test_param_bits_is_shared_tree_bits():
+    from repro.core import tree_bits
+
+    p = init_params(jax.random.PRNGKey(0), CFG)
+    assert param_bits(p) == tree_bits(p)
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(p))
+    assert param_bits(p) == 32.0 * n_params
