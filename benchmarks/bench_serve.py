@@ -15,6 +15,14 @@ Three comparisons over a mixed-size scenario stream:
    the async win is admission/padding overlapping device solves. The
    driver's answers are also replayed through the virtual-clock loadgen and
    must match hardened-X-exactly (the equivalence gate).
+4. **Warm-start cache** (virtual clock): the same service with
+   `repro.serve.warmstart` enabled vs cold, on the time-correlated
+   ``gauss_markov`` trace (the recurring-user workload the cache targets).
+   Gated deterministically: per-request objective dominance (warm <= cold,
+   float32 tolerance), exact-X replay equivalence re-injecting the recorded
+   warm starts, and cache-hit accounting (hits + misses == lookups, one put
+   per completion). Hit rate, solve-iteration savings and p95 latency are
+   reported informationally.
 
 Virtual-clock runs charge solves at measured wall time (see
 `repro.serve.loadgen`), so throughput and p50/p95 latency are honest while
@@ -49,6 +57,7 @@ from repro.serve import (
     BatchPolicy,
     RealClockDriver,
     ServeConfig,
+    WarmStartConfig,
     learn_buckets,
     pace_stream,
     padded_area_waste,
@@ -235,9 +244,56 @@ def run(quick: bool = False, seed: int = 0, smoke: bool | None = None):
         key, n_requests, scenario="gauss_markov", sizes=SIZES
     )
     arrivals = poisson_arrivals(jax.random.fold_in(key, 1), n_requests, top_rate)
-    _run_virtual(
+    gm_cold = _run_virtual(
         "service_gauss_markov", policy_cfgs["service"], gm_requests, arrivals,
         top_rate, service_execs, rows,
+    )
+
+    # --- warm-start cache: warm vs cold on the correlated trace (tentpole) --
+    # same stream, same arrivals, same compiled cache — the only difference
+    # is `ServeConfig.warmstart`, so any objective/iteration delta is the
+    # cache's doing. The dominance invariant (a warm start is one more
+    # multi-start candidate, selected only if better) makes warm <= cold a
+    # DETERMINISTIC claim per request; hit counts depend on batch boundaries
+    # (measured solve times move deadline flushes), so rates stay
+    # informational.
+    cfg_warm = policy_cfgs["service"]._replace(warmstart=WarmStartConfig())
+    warm_svc = AllocService(cfg_warm, executables=service_execs)
+    warm_svc.warmup(gm_requests)       # compile the refine programs untimed
+    warm_res = run_load(warm_svc, gm_requests, arrivals)
+    warm_stats = warm_svc.warm_cache.stats()
+    rows.append(
+        _row(
+            "service_gauss_markov_warm", top_rate, cfg_warm,
+            len(warm_res.completions), warm_res.makespan_s, warm_res.busy_s,
+            {**warm_res.summary, **warm_stats},
+        )
+    )
+    # replay the warm run with the RECORDED per-request starts injected into
+    # a cache-disabled service: answers must match the warm run exactly
+    # (equivalence stays well-defined even though cache state is
+    # schedule-dependent — the recorded starts ARE the schedule's outcome)
+    warm_by_id = {c.req_id: c for c in warm_res.completions}
+    recorded_starts = [warm_by_id[i].warm_start for i in range(n_requests)]
+    warm_replay = run_load(
+        AllocService(policy_cfgs["service"], executables=service_execs),
+        gm_requests, arrivals, warm_starts=recorded_starts,
+    )
+    cold_obj = {c.req_id: c.objective for c in gm_cold.completions}
+    warm_obj = {c.req_id: c.objective for c in warm_res.completions}
+    # float32 round-off headroom on the eq. 13 scale (objectives are O(1))
+    warm_dominates = all(
+        warm_obj[rid] <= cold_obj[rid] + 1e-5 * max(1.0, abs(cold_obj[rid]))
+        for rid in cold_obj
+    )
+    n_hits_flagged = sum(c.warm_hit for c in warm_res.completions)
+    warm_accounting_ok = (
+        # one lookup per admitted request, one put per completion, and the
+        # hit counter agrees with the per-completion hit flags
+        warm_stats["warm_cache_hits"] + warm_stats["warm_cache_misses"]
+        == n_requests
+        and warm_stats["warm_cache_puts"] == n_requests
+        and warm_stats["warm_cache_hits"] == n_hits_flagged
     )
 
     # --- async real-clock driver vs synchronous loop (tentpole) -------------
@@ -282,6 +338,13 @@ def run(quick: bool = False, seed: int = 0, smoke: bool | None = None):
         <= waste["waste_default"] + 1e-12,
         "driver_equivalent_to_virtual_loadgen": driver_equivalent,
         "driver_drained_everything": len(drv_done) == n_real and len(sync_done) == n_real,
+        # warm-start deterministic claims (dominance invariant + replay +
+        # accounting — see the warm section above)
+        "warm_dominates_cold_objective": warm_dominates,
+        "warm_replay_equivalent": same_hardened_assignments(
+            warm_res.completions, warm_replay.completions
+        ),
+        "warm_cache_accounting": warm_accounting_ok,
     }
     # timing-dependent observations — recorded, printed, NEVER gating (a busy
     # 2-core CI box must not fail an unrelated PR on a throughput ratio)
@@ -298,6 +361,19 @@ def run(quick: bool = False, seed: int = 0, smoke: bool | None = None):
             "throughput_rps"
         ]
         >= 0.5 * svc["throughput_rps"],
+        # warm-start informational rows: hit pattern depends on batch
+        # boundaries (measured solve times), so these observe, never gate
+        "warm_cache_hits_on_correlated_trace": warm_stats["warm_cache_hits"] > 0,
+        "warm_converges_no_slower_than_cold": (
+            warm_res.summary["warm_iters_mean"]
+            <= warm_res.summary["cold_iters_mean"]
+            if warm_stats["warm_cache_hits"] > 0
+            else True
+        ),
+        "warm_p95_comparable_to_cold": (
+            warm_res.summary["latency_p95_s"]
+            <= 2.0 * gm_cold.summary["latency_p95_s"]
+        ),
     }
 
     result = {
@@ -308,6 +384,17 @@ def run(quick: bool = False, seed: int = 0, smoke: bool | None = None):
         "smoke": smoke,
         "rows": rows,
         "ladder": waste,
+        "warmstart": {
+            **warm_stats,
+            "warm_iters_mean": warm_res.summary["warm_iters_mean"],
+            "cold_iters_mean": warm_res.summary["cold_iters_mean"],
+            "iter_savings_mean": (
+                warm_res.summary["cold_iters_mean"]
+                - warm_res.summary["warm_iters_mean"]
+            ),
+            "p95_warm_s": warm_res.summary["latency_p95_s"],
+            "p95_cold_s": gm_cold.summary["latency_p95_s"],
+        },
         "real_driver": {"n_requests": n_real, "rate_rps": real_rate},
         "speedup_throughput": svc["throughput_rps"] / max(base["throughput_rps"], 1e-12),
         "checks": checks,

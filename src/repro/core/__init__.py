@@ -2,7 +2,8 @@
 from .accuracy import AccuracyFn, default_accuracy, fit_power_law
 from .bits import tree_bits
 from .allocator import (
-    AllocatorConfig, AllocatorResult, sharded_batch_solver, solve, solve_batch,
+    AllocatorConfig, AllocatorResult, ExtraStart, refine_with_start,
+    sharded_batch_solver, sharded_refine_solver, solve, solve_batch,
 )
 from .channel import sample_params, sample_params_batch, sample_request_stream
 from .scoring import batch_objectives, candidate_objectives, scenario_objective
@@ -19,7 +20,8 @@ from .types import (
 __all__ = [
     "AccuracyFn", "default_accuracy", "fit_power_law", "tree_bits",
     "AllocatorConfig", "AllocatorResult", "solve", "solve_batch",
-    "sharded_batch_solver",
+    "sharded_batch_solver", "ExtraStart", "refine_with_start",
+    "sharded_refine_solver",
     "sample_params", "sample_params_batch", "sample_request_stream",
     "batch_objectives", "candidate_objectives", "scenario_objective",
     "Allocation", "SystemParams", "Weights", "dbm_to_watt",

@@ -32,6 +32,23 @@ from .system import objective
 from .types import Allocation, SystemParams, Weights
 
 
+class ExtraStart(NamedTuple):
+    """One optional warm-start candidate per scenario (a pytree).
+
+    ``f``/``P``/``X`` are a prior solution at the scenario's (padded) shape —
+    e.g. a `repro.serve.warmstart` cache hit or the previous FL round's
+    allocation. ``valid`` is a {0, 1} float: scenarios with ``valid == 0``
+    carry placeholder arrays and the candidate is excluded from selection
+    (its objective is forced to +inf), so a batch can mix hits and misses.
+    Batched use stacks a leading B axis on every leaf.
+    """
+
+    f: jax.Array    # (N,) or (B, N)
+    P: jax.Array    # (N, K) or (B, N, K)
+    X: jax.Array    # (N, K) or (B, N, K)
+    valid: jax.Array  # scalar or (B,) in {0., 1.}
+
+
 class AllocatorConfig(NamedTuple):
     outer_iters: int = 6           # J_max of Alg. A2
     inner: str = "sca"             # "sca" (Alg. A1) | "pgd" (reference) |
@@ -183,6 +200,7 @@ def solve(
     weights: Weights,
     cfg: AllocatorConfig = AllocatorConfig(),
     accuracy: AccuracyFn | None = None,
+    extra_start: ExtraStart | None = None,
 ) -> AllocatorResult:
     """Alg. A2 with multi-start (equal + low-power + full-payload inits),
     best kept.
@@ -193,8 +211,24 @@ def solve(
     per-iteration trace score through the batched `kernels/fedsem_objective`
     evaluator (`core.scoring`); scores agree with `system.objective` to
     float32 round-off, so the hardened result is unchanged.
+
+    ``extra_start`` optionally adds one more multi-start candidate — a prior
+    solution (warm start) run through the same Alg. A2 pipeline and competing
+    in the same best-of selection (see `refine_with_start` for the dominance
+    and cold-equivalence guarantees). ``None`` leaves this function
+    bit-for-bit identical to the pre-warm-start solver.
     """
     acc = accuracy or default_accuracy()
+    base = _solve_multi_start(params, weights, cfg, acc)
+    if extra_start is None:
+        return base
+    return refine_with_start(params, weights, cfg, acc, extra_start, base)
+
+
+def _solve_multi_start(
+    params: SystemParams, weights: Weights, cfg: AllocatorConfig, acc: AccuracyFn
+) -> AllocatorResult:
+    """The cold multi-start solve (the original `solve` body, unchanged)."""
     inners = ("sca", "pgd") if cfg.inner == "auto" else (cfg.inner,)
     starts = (
         equal_start(params),
@@ -218,6 +252,81 @@ def solve(
     return jax.tree.map(lambda x: x[best], stacked)
 
 
+def sanitize_start(params: SystemParams, extra: ExtraStart):
+    """Clamp an externally supplied (f, P, X) into the solver's domain.
+
+    Warm starts come from outside the solver (a cache, a previous FL round —
+    possibly for a *different* scenario under the same signature), so nothing
+    about them can be trusted: non-finite entries become benign values, f is
+    clipped into (0, f_max], P into [0, p_max] per entry, X into [0, 1], and
+    masked (padded) rows/columns are zeroed so a cached exact-shape entry
+    padded into a bucket stays inert exactly like the built-in starts. A
+    degenerate start (e.g. a device with no subcarrier) may still yield an
+    infinite objective downstream — `refine_with_start` masks those out of
+    the selection, so garbage can never win, only lose.
+    """
+    f = jnp.nan_to_num(extra.f, nan=0.0, posinf=0.0, neginf=0.0)
+    f = jnp.clip(f, 1e-6 * params.f_max, params.f_max)
+    P = jnp.nan_to_num(extra.P, nan=0.0, posinf=0.0, neginf=0.0)
+    P = jnp.clip(P, 0.0, params.p_max[:, None])
+    X = jnp.nan_to_num(extra.X, nan=0.0, posinf=0.0, neginf=0.0)
+    X = jnp.clip(X, 0.0, 1.0)
+    live = params.dev_mask[:, None] * params.sc_mask[None, :]
+    return f, P * live, X * live
+
+
+def refine_with_start(
+    params: SystemParams,
+    weights: Weights,
+    cfg: AllocatorConfig,
+    acc: AccuracyFn,
+    extra: ExtraStart,
+    base: AllocatorResult,
+) -> AllocatorResult:
+    """Fold one extra multi-start candidate into an already-solved result.
+
+    Runs the full Alg. A2 pipeline (P3/P5/PGD inner solvers, repair,
+    hardening) from ``extra``'s (f, P, X) — under every inner the config
+    races, like the built-in starts — then picks the better of {base
+    result, extra candidate(s)} by the same objective scoring the multi-start
+    selection uses.
+
+    Guarantees (the warm-start equivalence rows, tests/test_warmstart.py):
+
+    * **Dominance**: the selected objective is ``min(base, candidates)``, so
+      a warm start can only help or tie — never hurt — no matter how stale
+      or wrong-scenario the cached entry is (a garbage candidate scores +inf
+      via the finiteness guard and loses).
+    * **Cold equivalence**: with ``extra.valid == 0`` the candidates are
+      masked to +inf and ``argmin`` (first-occurrence tie-break) returns the
+      ``base`` leaves unchanged — bit-for-bit, because selection is a gather
+      over stacked results, and ``base`` itself was produced by the
+      unmodified cold program.
+    """
+    start = sanitize_start(params, extra)
+    inners = ("sca", "pgd") if cfg.inner == "auto" else (cfg.inner,)
+    cands = [
+        _solve_from(params, weights, cfg._replace(inner=inner), acc, start)
+        for inner in inners
+    ]
+    results = [base] + cands
+    if cfg.use_kernel_objective:
+        stacked_allocs = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[r.alloc for r in results]
+        )
+        objs = candidate_objectives(params, weights, stacked_allocs, acc)
+    else:
+        objs = jnp.stack([objective(params, weights, r.alloc, acc) for r in results])
+    # candidates (every index > 0) only compete when the start was real AND
+    # their objective is finite; the base result is never masked
+    is_cand = jnp.arange(len(results)) > 0
+    ok = (extra.valid > 0.0) & jnp.isfinite(objs)
+    objs = jnp.where(is_cand & ~ok, jnp.inf, objs)
+    best = jnp.argmin(objs)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *results)
+    return jax.tree.map(lambda x: x[best], stacked)
+
+
 def _solve_batch_impl(params_batch, weights, acc, cfg, weights_batched):
     w_axis = 0 if weights_batched else None
     return jax.vmap(
@@ -228,6 +337,43 @@ def _solve_batch_impl(params_batch, weights, acc, cfg, weights_batched):
 _solve_batch_jit = jax.jit(
     _solve_batch_impl, static_argnames=("cfg", "weights_batched")
 )
+
+
+def _refine_batch_impl(params_batch, weights, acc, extra, base, cfg, weights_batched):
+    """Per-scenario `refine_with_start` vmapped over the batch axis.
+
+    ``base`` is the cold `solve_batch` result for the same batch; scenarios
+    whose ``extra.valid`` is 0 pass their base row through bit-for-bit (the
+    selection gathers the base leaves), so a mixed hit/miss batch never
+    perturbs the misses.
+    """
+    w_axis = 0 if weights_batched else None
+    return jax.vmap(
+        lambda p, w, e, b: refine_with_start(p, w, cfg, acc, e, b),
+        in_axes=(0, w_axis, 0, 0),
+    )(params_batch, weights, extra, base)
+
+
+_refine_batch_jit = jax.jit(
+    _refine_batch_impl, static_argnames=("cfg", "weights_batched")
+)
+
+
+@functools.lru_cache(maxsize=None)
+def sharded_refine_solver(mesh, weights_batched: bool):
+    """Jitted `_refine_batch_impl` with the scenario axis sharded on ``mesh``
+    (the warm-start sibling of `sharded_batch_solver`: extra starts and the
+    base result shard with the scenarios, the accuracy fit replicates)."""
+    from .distribute import replicated, scenario_sharding
+
+    scen = scenario_sharding(mesh)
+    rep = replicated(mesh)
+    return jax.jit(
+        _refine_batch_impl,
+        static_argnames=("cfg", "weights_batched"),
+        in_shardings=(scen, scen if weights_batched else rep, rep, scen, scen),
+        out_shardings=scen,
+    )
 
 
 @functools.lru_cache(maxsize=None)
@@ -262,6 +408,7 @@ def solve_batch(
     *,
     weights_batched: bool = False,
     mesh=None,
+    extra_starts: ExtraStart | None = None,
 ) -> AllocatorResult:
     """Batched Alg. A2: solve B scenarios in one jitted, vmapped call.
 
@@ -285,6 +432,14 @@ def solve_batch(
     with the batch split device_count ways and no cross-device communication.
     Batches not divisible by ``mesh.size`` are padded by replicating the tail
     scenario and sliced back — exact, since scenarios are independent.
+
+    ``extra_starts`` optionally injects one warm-start candidate per scenario
+    (an `ExtraStart` with leading-B leaves, e.g. `repro.serve.warmstart`
+    cache hits): the cold batch solves first through the UNCHANGED program,
+    then a second jitted pass (`_refine_batch_impl`) runs Alg. A2 from each
+    valid start and keeps the per-scenario better of the two. ``None`` (the
+    default) is exactly the cold program — bit-for-bit, which is the
+    cold==disabled row of the equivalence table.
     """
     if params_batch.g.ndim != 3:
         raise ValueError(
@@ -306,9 +461,24 @@ def solve_batch(
                     "stack_weights(weights_list), or drop weights_batched to "
                     "broadcast one Weights to all scenarios."
                 )
+    if extra_starts is not None:
+        b = params_batch.g.shape[0]
+        v = jnp.shape(extra_starts.valid)
+        if len(v) != 1 or v[0] != b:
+            raise ValueError(
+                "solve_batch(extra_starts=...) requires extra_starts.valid of "
+                f"shape (B,) = ({b},) matching params_batch; got {v}. Stack "
+                "per-scenario warm starts with a leading batch axis "
+                "(repro.serve.warmstart builds these from cache hits)."
+            )
     acc = accuracy or default_accuracy()
     if mesh is None:
-        return _solve_batch_jit(params_batch, weights, acc, cfg, weights_batched)
+        base = _solve_batch_jit(params_batch, weights, acc, cfg, weights_batched)
+        if extra_starts is None:
+            return base
+        return _refine_batch_jit(
+            params_batch, weights, acc, extra_starts, base, cfg, weights_batched
+        )
 
     from .distribute import pad_batch, round_up, slice_batch
 
@@ -318,9 +488,15 @@ def solve_batch(
         params_batch = pad_batch(params_batch, b_pad)
         if weights_batched:
             weights = pad_batch(weights, b_pad)
+        if extra_starts is not None:
+            extra_starts = pad_batch(extra_starts, b_pad)
     res = sharded_batch_solver(mesh, weights_batched)(
         params_batch, weights, acc, cfg, weights_batched
     )
+    if extra_starts is not None:
+        res = sharded_refine_solver(mesh, weights_batched)(
+            params_batch, weights, acc, extra_starts, res, cfg, weights_batched
+        )
     return slice_batch(res, b) if b_pad != b else res
 
 

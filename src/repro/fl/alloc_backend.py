@@ -32,6 +32,7 @@ from repro.core import (
 )
 from repro.serve.driver import RealClockDriver
 from repro.serve.service import AllocService, ServeConfig
+from repro.serve.warmstart import entry_from_alloc
 
 
 class AllocationBackend:
@@ -114,11 +115,22 @@ class ServiceBackend(AllocationBackend):
       await the facade directly and skip `run_fl`).
 
     The target is borrowed, never owned: `close` leaves it running.
+
+    ``warm_rounds=True`` turns on round-to-round solution reuse: each round's
+    request carries the PREVIOUS round's hardened (f, P, X) as an explicit
+    warm-start entry (`repro.serve.warmstart.CacheEntry`, injected through
+    ``submit(..., warm_start=...)``). FL rounds are exactly the recurring-user
+    workload the warm-start cache targets — same devices, slowly drifting
+    channels — and the multi-start dominance argument applies unchanged: the
+    round's objective can only improve or tie versus a cold solve, and the
+    allocation the training step sees is still hardened and feasible. Works
+    with or without the service's own cache enabled (an explicit entry
+    overrides the cache lookup).
     """
 
     supports_accuracy_feedback = True
 
-    def __init__(self, target, *, timeout_s: float = 600.0):
+    def __init__(self, target, *, timeout_s: float = 600.0, warm_rounds: bool = False):
         target = getattr(target, "driver", target)  # unwrap the asyncio facade
         if isinstance(target, RealClockDriver):
             self._driver: RealClockDriver | None = target
@@ -132,21 +144,41 @@ class ServiceBackend(AllocationBackend):
                 f"RealClockDriver or an AsyncAllocDriver, got {type(target)!r}"
             )
         self._timeout_s = timeout_s
+        self._warm_rounds = warm_rounds
+        self._prev_alloc: Allocation | None = None
         self._scenarios: list[SystemParams] = []
         self._weights: Weights | None = None
 
     def open(self, scenarios: Sequence[SystemParams], weights: Weights) -> None:
         self._scenarios = list(scenarios)
         self._weights = weights
+        self._prev_alloc = None
+
+    def _warm_entry(self, params: SystemParams):
+        """Previous round's solution as a warm-start entry — only when shapes
+        still match (a population change mid-run resets the chain)."""
+        if not self._warm_rounds or self._prev_alloc is None:
+            return None
+        prev = self._prev_alloc
+        if prev.X.shape != (params.N, params.K):
+            return None
+        return entry_from_alloc(prev)
 
     def allocate(self, rnd: int) -> Allocation:
         params = self._scenarios[rnd]
+        warm = self._warm_entry(params)
         if self._driver is not None:
-            fut = self._driver.submit(params, self._weights)
-            return fut.result(timeout=self._timeout_s).alloc
-        req_id = self._service.submit(params, self._weights, now=float(rnd))
-        done, _ = self._service.drain(now=float(rnd))
-        return next(c.alloc for c in done if c.req_id == req_id)
+            fut = self._driver.submit(params, self._weights, warm_start=warm)
+            alloc = fut.result(timeout=self._timeout_s).alloc
+        else:
+            req_id = self._service.submit(
+                params, self._weights, now=float(rnd), warm_start=warm
+            )
+            done, _ = self._service.drain(now=float(rnd))
+            alloc = next(c.alloc for c in done if c.req_id == req_id)
+        if self._warm_rounds:
+            self._prev_alloc = alloc
+        return alloc
 
     def set_accuracy(self, acc) -> bool:
         self._service.set_accuracy(acc)

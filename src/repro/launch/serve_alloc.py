@@ -3,6 +3,7 @@
   PYTHONPATH=src python -m repro.launch.serve_alloc --requests 32 --rate 20
   PYTHONPATH=src python -m repro.launch.serve_alloc --driver real --ladder learned --smoke
   PYTHONPATH=src python -m repro.launch.serve_alloc --driver real --scenario gauss_markov --ladder auto --smoke
+  PYTHONPATH=src python -m repro.launch.serve_alloc --driver real --scenario gauss_markov --warmstart --smoke
 
 Generates a mixed-size scenario stream (shared per-subcarrier bandwidth so
 sizes co-batch in one `ShapeBucket`) from any registered scenario family
@@ -29,6 +30,14 @@ thread refit online when the observed mix's padded waste drifts past
 `DriverConfig.refit_waste_threshold` — no pre-fit pass over the stream.
 ``--policy exact --max-batch 1`` degenerates to the solve-per-request
 baseline the serving benchmark compares against.
+
+``--warmstart`` enables the warm-start solution-reuse cache
+(`repro.serve.warmstart`): each completed request's hardened solution is
+recorded under a quantized channel/accuracy signature, and later requests
+with a colliding signature ride it as an extra multi-start candidate —
+never-worse objectives (dominance), with cache hit/miss accounting in the
+summary. Under ``--driver real --smoke`` the equivalence replay re-injects
+the recorded per-request starts, so the exact-X gate covers warm runs too.
 """
 from __future__ import annotations
 
@@ -49,6 +58,7 @@ from repro.serve import (
     LadderLearner,
     RealClockDriver,
     ServeConfig,
+    WarmStartConfig,
     pace_stream,
     poisson_arrivals,
     run_load,
@@ -67,6 +77,7 @@ def build_config(args, buckets) -> ServeConfig:
         buckets=buckets,
         allocator=allocator,
         shard_batch=args.shard,
+        warmstart=WarmStartConfig() if args.warmstart else None,
     )
 
 
@@ -158,6 +169,15 @@ def main() -> int:
         "(gauss_markov: time-correlated fading across requests)",
     )
     ap.add_argument("--inner", choices=("pgd", "sca", "auto"), default="pgd")
+    ap.add_argument(
+        "--warmstart",
+        action="store_true",
+        help="enable the warm-start solution-reuse cache "
+        "(repro.serve.warmstart): completed hardened solutions re-enter "
+        "later solves as an extra multi-start candidate — never-worse "
+        "objectives by the dominance invariant, best paired with "
+        "--scenario gauss_markov (time-correlated channels produce hits)",
+    )
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true", help="tiny allocator + stream")
     ap.add_argument(
@@ -201,6 +221,8 @@ def main() -> int:
     n_feas = sum(
         bool(feasible(requests[c.req_id], c.alloc)) for c in completions
     )
+    if service.warm_cache is not None:
+        summary = {**summary, **service.warm_cache.stats()}
     print(json.dumps(summary, indent=2))
     print(
         f"served {len(completions)}/{n} requests "
@@ -212,9 +234,21 @@ def main() -> int:
     if args.driver == "real" and args.smoke:
         # equivalence gate: replay the same stream on the virtual clock (same
         # config, shared executable cache) — the hardened assignment of every
-        # request must match the real-clock driver's answer exactly
+        # request must match the real-clock driver's answer exactly. With
+        # --warmstart, cache contents are timing-dependent (batch boundaries
+        # move which entries exist at each lookup), so the replay re-injects
+        # the RECORDED per-request warm starts into a cache-disabled service
+        # — same inputs, so still exact X equality
+        replay_cfg = cfg._replace(warmstart=None)
+        starts = None
+        if args.warmstart:
+            by_id = {c.req_id: c for c in completions}
+            starts = [by_id[i].warm_start for i in range(len(requests))]
         replay = run_load(
-            AllocService(cfg, executables=service.executables), requests, arrivals
+            AllocService(replay_cfg, executables=service.executables),
+            requests,
+            arrivals,
+            warm_starts=starts,
         )
         same = same_hardened_assignments(completions, replay.completions)
         print(

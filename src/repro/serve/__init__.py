@@ -12,6 +12,11 @@ Two drivers sit on top of the sans-IO core: the virtual-clock load generator
 real-clock threaded `driver.RealClockDriver` (bounded admission queue,
 solver thread, deadline timer, graceful drain). `ladder.LadderLearner`
 learns an autoscaling `ShapeBucket` ladder from the observed shape mix.
+`warmstart.WarmStartCache` closes the recurring-user loop: completed
+hardened solutions are recorded under a quantized channel/accuracy signature
+and re-enter later solves as an extra multi-start candidate — never-worse by
+the multi-start dominance argument, bit-identical to the cold path when
+disabled or missing.
 
 Layer-wide equivalence contract: padding (shape buckets), co-batching
 (micro-batches), sharding (`shard_batch`), the kernel objective path and the
@@ -33,9 +38,15 @@ from .ladder import (
 from .loadgen import LoadResult, poisson_arrivals, run_load, scenario_stream
 from .metrics import Reservoir, ServiceMetrics, percentile
 from .service import AllocService, Completion, ServeConfig
+from .warmstart import (
+    CacheEntry, WarmStartCache, WarmStartConfig, batch_starts,
+    entry_from_alloc, iters_to_converge, pad_start, request_signature,
+)
 
 __all__ = [
     "AllocService", "Completion", "ServeConfig",
+    "WarmStartCache", "WarmStartConfig", "CacheEntry", "request_signature",
+    "entry_from_alloc", "pad_start", "batch_starts", "iters_to_converge",
     "BatchPolicy", "MicroBatcher", "PendingRequest",
     "ServiceMetrics", "Reservoir", "percentile",
     "LoadResult", "poisson_arrivals", "run_load", "scenario_stream",

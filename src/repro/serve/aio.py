@@ -57,17 +57,22 @@ class AsyncAllocDriver:
         return self
 
     async def submit(
-        self, params: SystemParams, weights: Weights | None = None
+        self,
+        params: SystemParams,
+        weights: Weights | None = None,
+        warm_start=None,
     ) -> Completion:
         """Admit one scenario and await its `Completion`.
 
         Backpressure-safe: the blocking enqueue runs in the executor, and
         the solve itself is awaited through the driver's future — the event
         loop stays free for other coroutines while the solver thread works.
+        ``warm_start`` passes through to `RealClockDriver.submit` (an
+        explicit warm-start entry overriding any cache lookup).
         """
         loop = asyncio.get_running_loop()
         fut = await loop.run_in_executor(
-            None, self.driver.submit, params, weights
+            None, self.driver.submit, params, weights, warm_start
         )
         return await asyncio.wrap_future(fut)
 

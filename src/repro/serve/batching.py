@@ -34,6 +34,14 @@ class PendingRequest:
     padded: SystemParams        # padded into the bucket (masks set)
     weights: Weights
     arrival_t: float
+    #: exact-shape warm-start candidate attached at `prepare` (a
+    #: `repro.serve.warmstart.CacheEntry` — cache hit or explicit caller
+    #: injection); None = cold request
+    warm_start: object | None = None
+    #: the request's warm-cache signature (computed once at `prepare`, reused
+    #: to record the hardened solution after the flush); None when the
+    #: service runs without a cache
+    warm_sig: tuple | None = None
 
 
 class MicroBatcher:

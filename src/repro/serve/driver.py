@@ -221,18 +221,27 @@ class RealClockDriver:
         timestamps use)."""
         return time.monotonic() - self._t0
 
-    def submit(self, params: SystemParams, weights: Weights | None = None) -> Future:
+    def submit(
+        self,
+        params: SystemParams,
+        weights: Weights | None = None,
+        warm_start=None,
+    ) -> Future:
         """Admit one scenario from any thread; returns a Future resolving to
         its `Completion`.
 
         Pads/canonicalises on THIS thread (overlapping any running solve),
         then enqueues on the bounded admission queue: blocks under
         backpressure when ``cfg.block`` (up to ``cfg.submit_timeout_s``),
-        else raises `AdmissionQueueFull`.
+        else raises `AdmissionQueueFull`. ``warm_start`` optionally injects
+        an explicit warm-start entry (`repro.serve.warmstart.CacheEntry`),
+        overriding any cache lookup — the FL backend's round-to-round reuse
+        and the replay gate use this; normal serving leaves it None and lets
+        the service's cache attach hits.
         """
         if self._closed.is_set():
             raise DriverClosed("driver is closed; no further admissions")
-        prepared = self.service.prepare(params, weights)
+        prepared = self.service.prepare(params, weights, warm_start)
         fut: Future = Future()
         # re-check + enqueue under the fence: close() flips the flag under
         # the same lock, so a submit that slept through close() during the
@@ -357,13 +366,17 @@ class RealClockDriver:
         self.close()
 
     def summary(self) -> dict:
-        """Service metrics plus driver-level admission stats."""
-        return {
+        """Service metrics plus driver-level admission stats (and warm-start
+        cache accounting when the service runs one)."""
+        out = {
             **self.service.metrics.summary(),
             "queue_capacity": self.cfg.queue_capacity,
             "inflight": len(self._tickets),
             "auto_refits": self.auto_refits,
         }
+        if self.service.warm_cache is not None:
+            out.update(self.service.warm_cache.stats())
+        return out
 
     # -- solver thread -------------------------------------------------------
 

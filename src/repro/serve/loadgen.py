@@ -61,11 +61,16 @@ def run_load(
     requests: list[SystemParams],
     arrivals,
     weights: list[Weights] | None = None,
+    warm_starts: list | None = None,
 ) -> LoadResult:
     """Drive ``service`` with ``requests[i]`` arriving at ``arrivals[i]``.
 
     Returns every completion (the run always drains). ``weights`` optionally
-    carries per-request objective weights.
+    carries per-request objective weights; ``warm_starts`` optionally injects
+    an explicit warm-start entry per request (None entries stay cold) — this
+    is how a virtual replay reproduces a real-clock warm run exactly: cache
+    contents are timing-dependent, so the replay re-injects the RECORDED
+    `Completion.warm_start` entries instead of relying on its own cache.
     """
     if len(requests) != len(arrivals):
         raise ValueError(
@@ -75,6 +80,10 @@ def run_load(
         # fail at admission, not with an IndexError mid-run
         raise ValueError(
             f"weights ({len(weights)}) and requests ({len(requests)}) differ"
+        )
+    if warm_starts is not None and len(warm_starts) != len(requests):
+        raise ValueError(
+            f"warm_starts ({len(warm_starts)}) and requests ({len(requests)}) differ"
         )
     arrivals = [float(t) for t in arrivals]
     if any(b < a for a, b in zip(arrivals, arrivals[1:])):
@@ -100,6 +109,7 @@ def run_load(
                 requests[i],
                 weights[i] if weights is not None else None,
                 now=arrivals[i],
+                warm_start=warm_starts[i] if warm_starts is not None else None,
             )
             i += 1
         return i

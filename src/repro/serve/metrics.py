@@ -103,12 +103,19 @@ class ServiceMetrics:
     solves_s: Reservoir = dataclasses.field(default_factory=Reservoir)     # per batch
     queue_depth: Reservoir = dataclasses.field(default_factory=Reservoir)  # sampled on submit
     occupancy: Reservoir = dataclasses.field(default_factory=Reservoir)    # real / slots
+    #: outer iterations Alg. A2 needed to converge, split by whether the
+    #: request rode a warm start (`warmstart.iters_to_converge`) — the
+    #: solve-iteration-savings evidence `bench_serve` reports
+    warm_iters: Reservoir = dataclasses.field(default_factory=Reservoir)
+    cold_iters: Reservoir = dataclasses.field(default_factory=Reservoir)
     submitted: int = 0
     completed: int = 0
     batches: int = 0
     cache_hits: int = 0
     cache_misses: int = 0
     compile_s: float = 0.0
+    warm_hits: int = 0
+    warm_misses: int = 0
 
     def observe_submit(self, depth: int) -> None:
         self.submitted += 1
@@ -123,6 +130,17 @@ class ServiceMetrics:
         self.completed += 1
         self.latencies_s.add(latency_s)
         self.waits_s.add(wait_s)
+
+    def observe_warm(self, hit: bool, iters: int) -> None:
+        """Record one completed request's convergence iterations under the
+        warm/cold split (only called when the service has warm starts in
+        play, so a cold-only service's summary stays unchanged)."""
+        if hit:
+            self.warm_hits += 1
+            self.warm_iters.add(iters)
+        else:
+            self.warm_misses += 1
+            self.cold_iters.add(iters)
 
     def observe_cache(self, hit: bool, compile_s: float = 0.0) -> None:
         if hit:
@@ -148,4 +166,8 @@ class ServiceMetrics:
             "cache_hits": self.cache_hits,
             "cache_misses": self.cache_misses,
             "compile_s": self.compile_s,
+            "warm_hits": self.warm_hits,
+            "warm_misses": self.warm_misses,
+            "warm_iters_mean": self.warm_iters.mean(),
+            "cold_iters_mean": self.cold_iters.mean(),
         }

@@ -53,13 +53,27 @@ from repro.core import (
     unpad_alloc,
 )
 from repro.core.accuracy import default_accuracy
-from repro.core.allocator import _solve_batch_jit
+from repro.core.allocator import (
+    _refine_batch_jit,
+    _solve_batch_impl,
+    _solve_batch_jit,
+    sharded_refine_solver,
+)
 from repro.core.distribute import replicated
 from repro.core.scoring import batch_objectives
 from repro.core.types import DEFAULT_BUCKETS, ShapeBucket
 
 from .batching import BatchPolicy, MicroBatcher, PendingRequest
 from .metrics import ServiceMetrics
+from .warmstart import (
+    CacheEntry,
+    WarmStartCache,
+    WarmStartConfig,
+    batch_starts,
+    entry_from_alloc,
+    iters_to_converge,
+    request_signature,
+)
 
 
 class ServeConfig(NamedTuple):
@@ -80,6 +94,12 @@ class ServeConfig(NamedTuple):
     #: `kernels/fedsem_objective` evaluator (one fused call per flush) and
     #: report the eq. 13 value on each `Completion.objective`
     score_objective: bool = True
+    #: warm-start solution-reuse cache (`repro.serve.warmstart`): record each
+    #: completed request's hardened solution under a quantized channel/
+    #: accuracy signature and inject hits into later flushes as an extra
+    #: multi-start candidate. None (default) disables it — the cold path,
+    #: bit-for-bit (the cold==disabled equivalence row)
+    warmstart: WarmStartConfig | None = None
 
 
 #: one fused batched-kernel scoring call per flush; jit-cached per bucket
@@ -115,6 +135,14 @@ class Completion(NamedTuple):
     #: batched kernel (== `system.objective` on the exact-shape scenario to
     #: float32 round-off); None when ``ServeConfig.score_objective`` is off
     objective: float | None = None
+    #: True when this request rode a warm-start candidate (cache hit or
+    #: explicit injection) into its flush
+    warm_hit: bool = False
+    #: the exact-shape warm-start entry that rode along (None for a cold
+    #: request). Recorded so a virtual-clock replay can re-inject the SAME
+    #: starts explicitly — real==virtual equivalence stays exact even though
+    #: cache contents are timing-dependent (batch boundaries move)
+    warm_start: CacheEntry | None = None
 
 
 class AllocService:
@@ -140,6 +168,12 @@ class AllocService:
         self._executables = executables if executables is not None else {}
         self._acc = default_accuracy()
         self._next_id = 0
+        #: warm-start solution cache (None when disabled). Thread-safe on its
+        #: own lock: `prepare` reads it from caller threads, the solver
+        #: thread writes it after each flush
+        self.warm_cache = (
+            WarmStartCache(cfg.warmstart) if cfg.warmstart is not None else None
+        )
 
     @property
     def executables(self) -> dict[tuple, object]:
@@ -174,20 +208,36 @@ class AllocService:
         )
 
     def prepare(
-        self, params: SystemParams, weights: Weights | None = None
+        self,
+        params: SystemParams,
+        weights: Weights | None = None,
+        warm_start: CacheEntry | None = None,
     ) -> PendingRequest:
         """Pad/canonicalise one scenario into its bucket WITHOUT touching any
         queue state (``req_id``/``arrival_t`` are placeholders until `admit`).
 
         This is the pure, stateless half of admission: the real-clock driver
         runs it on the *caller's* thread, so the host-side padding work
-        overlaps the solver thread's device solves (which release the GIL)."""
+        overlaps the solver thread's device solves (which release the GIL).
+        The warm-cache lookup happens here too (the cache has its own lock):
+        an explicit ``warm_start`` entry — e.g. the previous FL round's
+        solution, or a replay re-injecting a recorded hit — takes precedence
+        over whatever the cache holds."""
+        w = weights if weights is not None else Weights.ones()
+        sig = None
+        if self.warm_cache is not None:
+            sig = request_signature(params, w, self._acc, self.cfg.warmstart)
+        entry = warm_start
+        if entry is None and self.warm_cache is not None:
+            entry = self.warm_cache.get(sig)
         return PendingRequest(
             req_id=-1,
             params=params,
             padded=self._pad(params),
-            weights=weights if weights is not None else Weights.ones(),
+            weights=w,
             arrival_t=0.0,
+            warm_start=entry,
+            warm_sig=sig,
         )
 
     def admit(self, req: PendingRequest, now: float) -> int:
@@ -203,11 +253,15 @@ class AllocService:
         return req.req_id
 
     def submit(
-        self, params: SystemParams, weights: Weights | None = None, now: float = 0.0
+        self,
+        params: SystemParams,
+        weights: Weights | None = None,
+        now: float = 0.0,
+        warm_start: CacheEntry | None = None,
     ) -> int:
         """Admit one scenario; returns its request id. Does not solve — call
         `flush_full` / `flush_due` / `drain` to get completions."""
-        return self.admit(self.prepare(params, weights), now)
+        return self.admit(self.prepare(params, weights, warm_start), now)
 
     def set_buckets(self, buckets: tuple[ShapeBucket, ...] | None) -> None:
         """Swap the bucket ladder (e.g. a learned `repro.serve.ladder` refit
@@ -230,6 +284,12 @@ class AllocService:
         at their flush — the model is service-global, which is the point
         (one base station, one accuracy belief) but means co-tenant jobs on
         a shared driver also see the refit.
+
+        Warm-start cache entries recorded under the OLD model stay valid and
+        need no invalidation: a hit is only ever a *start point* — the refine
+        pass re-solves and re-scores it under whatever model is current, so
+        a stale entry competes on the new objective and can only help or tie
+        (regression-tested in tests/test_warmstart.py).
         """
         self._acc = acc
 
@@ -290,6 +350,47 @@ class AllocService:
             self.metrics.observe_cache(hit=True)
         return exe
 
+    def _place_extra(self, extra):
+        """Commit a flush's warm-start batch to the device(s) the executables
+        expect (scenario-sharded like the params when running on a mesh)."""
+        if self.mesh is None:
+            return jax.tree.map(jax.numpy.asarray, extra)
+        return jax.device_put(extra, scenario_sharding(self.mesh))
+
+    def _refiner(self, key: tuple, slots: int, pb, wb, extra):
+        """AOT-compiled warm-refine executable for one (bucket, slots) pair —
+        the second program of a warm flush: takes the cold result plus the
+        flush's `ExtraStart` batch and returns the per-scenario better of the
+        two (`core.allocator._refine_batch_impl`). Cached beside the cold
+        executables under a distinct key so cold-only services never pay its
+        compile, and flushes with zero hits never run it."""
+        cache_key = (key, slots, self.cfg.allocator, self.mesh, "warm-refine")
+        exe = self._executables.get(cache_key)
+        if exe is None:
+            cfg = self.cfg.allocator
+            jitted = (
+                _refine_batch_jit
+                if self.mesh is None
+                else sharded_refine_solver(self.mesh, True)
+            )
+            pb, wb, acc = self._place(pb, wb)
+            extra = self._place_extra(extra)
+            # the cold result's abstract shape is all lowering needs — no
+            # solve happens here, so compile time stays out of solve_s
+            base = jax.eval_shape(
+                functools.partial(
+                    _solve_batch_impl, cfg=cfg, weights_batched=True
+                ),
+                pb, wb, acc,
+            )
+            t0 = time.perf_counter()
+            exe = jitted.lower(pb, wb, acc, extra, base, cfg, True).compile()
+            self._executables[cache_key] = exe
+            self.metrics.observe_cache(hit=False, compile_s=time.perf_counter() - t0)
+        else:
+            self.metrics.observe_cache(hit=True)
+        return exe
+
     def warmup(self, example_params) -> None:
         """Pre-compile executables for the buckets the given example scenarios
         land in (serving warm-up, so first requests don't pay compile time).
@@ -309,6 +410,19 @@ class AllocService:
             pb = stack_params([padded] * slots)
             wb = stack_weights([Weights.ones()] * slots)
             self._solver(key, slots, pb, wb)
+            if self.cfg.warmstart is not None:
+                # pre-compile the warm-refine program too (a placeholder
+                # entry fixes the shapes; contents are irrelevant to tracing)
+                dummy = CacheEntry(
+                    f=0.5 * np.asarray(padded.f_max, dtype=np.float32),
+                    P=np.zeros((padded.N, padded.K), dtype=np.float32),
+                    X=np.zeros((padded.N, padded.K), dtype=np.float32),
+                    objective=float("nan"),
+                )
+                extra = batch_starts(
+                    [dummy] + [None] * (slots - 1), [padded] * slots
+                )
+                self._refiner(key, slots, pb, wb, extra)
 
     # -- flushing ------------------------------------------------------------
 
@@ -322,9 +436,23 @@ class AllocService:
         pb = stack_params([r.padded for r in filled])
         wb = stack_weights([r.weights for r in filled])
         exe = self._solver(key, slots, pb, wb)
+        # one ExtraStart batch for the flush iff ANY rider has a warm start
+        # (`batch_starts` returns None otherwise): a hitless flush runs the
+        # UNCHANGED cold executable only — the cold==disabled equivalence row
+        # holds per flush, not just per service
+        extra = batch_starts(
+            [r.warm_start for r in filled], [r.padded for r in filled]
+        )
+        if extra is not None:
+            refine = self._refiner(key, slots, pb, wb, extra)
+            extra = self._place_extra(extra)
         pb, wb, acc = self._place(pb, wb)
         t0 = time.perf_counter()
-        res = jax.block_until_ready(exe(pb, wb, acc))
+        if extra is None:
+            res = jax.block_until_ready(exe(pb, wb, acc))
+        else:
+            base = exe(pb, wb, acc)
+            res = jax.block_until_ready(refine(pb, wb, acc, extra, base))
         solve_s = time.perf_counter() - t0
         self.metrics.observe_batch(n_real, slots, solve_s)
         # score the padded batch through the batched kernel in one fused call
@@ -335,11 +463,34 @@ class AllocService:
             else None
         )
 
+        # convergence traces for the iteration-savings metric (host copy once
+        # per flush, only when warm starts are in play on this service)
+        traces = (
+            np.asarray(res.trace)
+            if (self.cfg.warmstart is not None or extra is not None)
+            else None
+        )
+        iters_rtol = (
+            self.cfg.warmstart.iters_rtol
+            if self.cfg.warmstart is not None
+            else WarmStartConfig().iters_rtol
+        )
+
         out = []
         for i, req in enumerate(pending):
             alloc = unpad_alloc(
                 tree_index(res.alloc, i), req.params.N, req.params.K
             )
+            obj = float(objs[i]) if objs is not None else None
+            # record the hardened solution for future requests under this
+            # signature (exact shape: one entry serves every covering bucket)
+            if self.warm_cache is not None and req.warm_sig is not None:
+                self.warm_cache.put(req.warm_sig, entry_from_alloc(alloc, obj))
+            if traces is not None:
+                self.metrics.observe_warm(
+                    hit=req.warm_start is not None,
+                    iters=iters_to_converge(traces[i], iters_rtol),
+                )
             wait = now - req.arrival_t
             latency = wait + solve_s
             self.metrics.observe_completion(latency, wait)
@@ -351,7 +502,9 @@ class AllocService:
                     latency_s=latency,
                     wait_s=wait,
                     solve_s=solve_s,
-                    objective=float(objs[i]) if objs is not None else None,
+                    objective=obj,
+                    warm_hit=req.warm_start is not None,
+                    warm_start=req.warm_start,
                 )
             )
         return out, solve_s

@@ -120,6 +120,7 @@ def test_kappa3_raises_rho():
     assert rhos[1] >= rhos[0]
 
 
+@pytest.mark.slow
 @hypothesis.settings(max_examples=5, deadline=None)
 @hypothesis.given(seed=st.integers(min_value=0, max_value=10_000))
 def test_allocator_property_feasible_any_channel(seed):

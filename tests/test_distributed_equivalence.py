@@ -105,6 +105,7 @@ def test_decode_matches_prefill_logits():
     )
 
 
+@pytest.mark.slow
 def test_sliding_window_decode_ring_buffer():
     """Ring-buffer window cache == full cache when S <= window, and attends
     only the window when S > window."""

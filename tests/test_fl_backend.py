@@ -164,3 +164,35 @@ def test_round_hook_sees_every_round(executables):
     )
     assert [s[0] for s in seen] == [0, 1]
     assert all(0 < s[1] <= 1.0 for s in seen)
+
+
+def test_service_backend_warm_rounds_dominates(scenarios, executables):
+    """``warm_rounds=True`` chains each round's request to the previous
+    round's hardened solution as an explicit warm start. The dominance
+    baseline is the SAME service cold (warm_rounds off) — dominance is an
+    invariant of one padded program, and the planned exact-shape solve
+    carries fp-level padding drift that is outside its scope. Round 0 has no
+    predecessor, so it is bit-for-bit the cold round 0."""
+    from repro.core.accuracy import default_accuracy
+    from repro.core.system import objective
+
+    cold_backend = ServiceBackend(
+        AllocService(SERVE, executables=executables), warm_rounds=False
+    )
+    warm_backend = ServiceBackend(
+        AllocService(SERVE, executables=executables), warm_rounds=True
+    )
+    cold_backend.open(scenarios, Weights.ones())
+    warm_backend.open(scenarios, Weights.ones())
+    acc = default_accuracy()
+    for rnd in range(FL.rounds):
+        warm = warm_backend.allocate(rnd)
+        cold = cold_backend.allocate(rnd)
+        if rnd == 0:
+            np.testing.assert_array_equal(np.asarray(warm.X), np.asarray(cold.X))
+            np.testing.assert_array_equal(np.asarray(warm.f), np.asarray(cold.f))
+        o_warm = float(objective(scenarios[rnd], Weights.ones(), warm, acc))
+        o_cold = float(objective(scenarios[rnd], Weights.ones(), cold, acc))
+        assert o_warm <= o_cold + 1e-5 * max(1.0, abs(o_cold))
+        X = np.asarray(warm.X)
+        assert set(np.unique(X)) <= {0.0, 1.0}
