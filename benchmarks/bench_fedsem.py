@@ -4,10 +4,13 @@ service (the `repro.launch.fedsem_e2e` harness, recorded as BENCH rows).
 Phases (shared compiled-executable cache, see the harness docstring):
 backend equivalence (PlannedBackend == virtual-clock ServiceBackend, exact
 hardened X), the A(rho) feedback loop (a refit from the job's own
-proxy-accuracy measurements must be applied and stay monotone), then J
-concurrent heterogeneous FL jobs sharing one `RealClockDriver`. Rows record
-every job's fig8-style per-round accuracy/energy trajectory plus the
-service-side latency/occupancy summary under FL load.
+proxy-accuracy measurements must be applied and stay monotone), J concurrent
+heterogeneous FL jobs sharing one `RealClockDriver` — each a TENANT whose
+refits are scoped to its own rounds — then the non-interference gate: each
+job re-run alone must reproduce its co-tenanted trajectory exactly. Rows
+record every job's fig8-style per-round accuracy/energy trajectory (tenant-
+tagged; these rounds co-batched across tenants), each job's own refit
+trajectory, plus the service-side latency/occupancy summary under FL load.
 
 Writes ``BENCH_fedsem.json`` at the repo root (full run) so future PRs have
 a closed-loop trajectory; ``--smoke`` writes
@@ -15,7 +18,8 @@ a closed-loop trajectory; ``--smoke`` writes
 reduced allocator for CI.
 
 Exit status gates ONLY the deterministic claims (equivalence, refit
-monotonicity, every job finishing every round): throughput/occupancy
+monotonicity, tenant non-interference, every job finishing every round):
+throughput/occupancy
 observations are informational ``perf_checks`` — a loaded CI box must not
 fail an unrelated PR (the bench_serve convention).
 
@@ -33,10 +37,12 @@ import jax
 from repro.core import tree_bits
 from repro.launch.fedsem_e2e import (
     check_backend_equivalence,
+    check_noninterference,
     harness_config,
     make_job,
     run_multijob,
     run_refit_loop,
+    tenant_id,
     trajectory,
 )
 from repro.semcom import init_params
@@ -67,19 +73,23 @@ def run(quick: bool = False, seed: int = 0, smoke: bool | None = None):
         make_job(specs[0], rounds, ae, batch, eval_batch),
         serve_cfg, executables,
     )
+    key3 = jax.random.fold_in(key, 300)
     jobs = [make_job(s, rounds, ae, batch, eval_batch) for s in specs]
-    results, summary = run_multijob(
-        jax.random.fold_in(key, 300), jobs, serve_cfg, executables
-    )
+    results, summary = run_multijob(key3, jobs, serve_cfg, executables)
+    # per-tenant non-interference: each job re-run alone (same seed fold and
+    # tenant id) must reproduce its co-tenanted trajectory exactly
+    nonint = check_noninterference(key3, jobs, results, serve_cfg, executables)
 
-    # one row per (job, round): the multi-job accuracy/energy trajectory
+    # one row per (job, round): the multi-job accuracy/energy trajectory,
+    # tagged with the job's tenant id (these rounds co-batched across tenants)
     rows = []
-    for spec, res in zip(specs, results):
+    for i, (spec, job, res) in enumerate(zip(specs, jobs, results)):
         traj = trajectory(res)
         for rnd in range(traj["rounds"]):
             rows.append(
                 {
                     "job": res.name,
+                    "tenant": tenant_id(job, i),
                     "scenario": spec[1],
                     "n_clients": spec[2],
                     "n_subcarriers": spec[3],
@@ -91,9 +101,25 @@ def run(quick: bool = False, seed: int = 0, smoke: bool | None = None):
                     "objective": traj["objective"][rnd],
                 }
             )
-    # plus the service-side view of the same load: latency + occupancy
+    # each job's own refit trajectory: the fit its LATER rounds solved under,
+    # scoped to its tenant registry entry (never visible to co-tenants)
+    refits = [
+        {
+            "job": res.name,
+            "tenant": tenant_id(job, i),
+            "refit_applied": res.refit_applied,
+            "refit_round": res.refit_round,
+            "fit_a": float(res.accuracy_fit.a) if res.accuracy_fit else None,
+            "fit_b": float(res.accuracy_fit.b) if res.accuracy_fit else None,
+            "n_measurements": len(res.measurements),
+        }
+        for i, (job, res) in enumerate(zip(jobs, results))
+    ]
+    # plus the service-side view of the same load: latency + the occupancy of
+    # the MIXED-TENANT co-batches (distinct tenants' rounds sharing one solve)
     service_row = {
         "jobs": len(results),
+        "tenants": len({r["tenant"] for r in rows}),
         "rounds": rounds,
         "requests": summary.get("completed"),
         "latency_p50_s": summary.get("latency_p50_s"),
@@ -107,6 +133,7 @@ def run(quick: bool = False, seed: int = 0, smoke: bool | None = None):
     checks = {
         "service_backend_matches_planned": eq["equivalent"],
         "refit_applied_and_monotone": refit["ok"],
+        "tenant_noninterference_as_if_alone": nonint["ok"],
         "all_jobs_completed_all_rounds": completed,
         "every_round_allocated": all(0.0 < r["rho"] <= 1.0 for r in rows),
         "service_latency_recorded": bool(
@@ -129,7 +156,9 @@ def run(quick: bool = False, seed: int = 0, smoke: bool | None = None):
         "smoke": smoke,
         "equivalence": eq,
         "refit": refit,
+        "noninterference": nonint,
         "rows": rows,
+        "refits": refits,
         "service": service_row,
         "checks": checks,
         "perf_checks": perf_checks,

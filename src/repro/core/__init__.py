@@ -1,5 +1,5 @@
 """FedSem core: the paper's resource-allocation contribution in JAX."""
-from .accuracy import AccuracyFn, default_accuracy, fit_power_law
+from .accuracy import AccuracyFn, default_accuracy, fit_power_law, stack_accuracy
 from .bits import tree_bits
 from .allocator import (
     AllocatorConfig, AllocatorResult, ExtraStart, refine_with_start,
@@ -18,7 +18,8 @@ from .types import (
 )
 
 __all__ = [
-    "AccuracyFn", "default_accuracy", "fit_power_law", "tree_bits",
+    "AccuracyFn", "default_accuracy", "fit_power_law", "stack_accuracy",
+    "tree_bits",
     "AllocatorConfig", "AllocatorResult", "solve", "solve_batch",
     "sharded_batch_solver", "ExtraStart", "refine_with_start",
     "sharded_refine_solver",

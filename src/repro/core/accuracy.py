@@ -41,6 +41,24 @@ def default_accuracy() -> AccuracyFn:
     return AccuracyFn(jnp.float32(0.6356), jnp.float32(0.4025))
 
 
+def stack_accuracy(acc_list) -> AccuracyFn:
+    """Stack per-scenario `AccuracyFn` fits over a new leading batch axis.
+
+    The result feeds ``solve_batch(..., acc_batched=True)`` (sibling of
+    `stack_weights` for the accuracy pytree): leaves become ``a``/``b`` of
+    shape (B,), one power-law fit per stacked scenario. This is how the
+    serving layer rides each co-batched request's OWN A(rho) belief through
+    one compiled executable — multi-tenant batches mix fits per row, and a
+    uniform batch (every row the same fit) solves identically to the
+    replicated-scalar program (the multi-tenant equivalence rows,
+    tests/test_multitenant_accuracy.py).
+    """
+    acc_list = list(acc_list)
+    if not acc_list:
+        raise ValueError("stack_accuracy needs at least one AccuracyFn")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *acc_list)
+
+
 def yolov3_accuracy() -> AccuracyFn:
     """Slightly lower-ceiling curve used for the paper's YOLOv3 line (Fig 8b).
 

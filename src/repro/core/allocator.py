@@ -33,7 +33,7 @@ from .types import Allocation, SystemParams, Weights
 
 
 class ExtraStart(NamedTuple):
-    """One optional warm-start candidate per scenario (a pytree).
+    """Optional warm-start candidate(s) per scenario (a pytree).
 
     ``f``/``P``/``X`` are a prior solution at the scenario's (padded) shape —
     e.g. a `repro.serve.warmstart` cache hit or the previous FL round's
@@ -41,12 +41,19 @@ class ExtraStart(NamedTuple):
     carry placeholder arrays and the candidate is excluded from selection
     (its objective is forced to +inf), so a batch can mix hits and misses.
     Batched use stacks a leading B axis on every leaf.
+
+    A CANDIDATE axis may additionally precede the per-scenario shapes
+    (``valid``: (C,) single-scenario, (B, C) batched): every candidate is run
+    through the same Alg. A2 refine and competes in the same argmin — the
+    top-k warm-start path (`repro.serve.warmstart.WarmStartCache.lookup`).
+    Candidate-less shapes (scalar / (B,) ``valid``) stay the single-candidate
+    program, bit-for-bit.
     """
 
-    f: jax.Array    # (N,) or (B, N)
-    P: jax.Array    # (N, K) or (B, N, K)
-    X: jax.Array    # (N, K) or (B, N, K)
-    valid: jax.Array  # scalar or (B,) in {0., 1.}
+    f: jax.Array    # (N,) / (B, N) — or (C, N) / (B, C, N)
+    P: jax.Array    # (N, K) / (B, N, K) — or (C, N, K) / (B, C, N, K)
+    X: jax.Array    # like P
+    valid: jax.Array  # scalar / (B,) — or (C,) / (B, C) — in {0., 1.}
 
 
 class AllocatorConfig(NamedTuple):
@@ -302,13 +309,29 @@ def refine_with_start(
       ``base`` leaves unchanged — bit-for-bit, because selection is a gather
       over stacked results, and ``base`` itself was produced by the
       unmodified cold program.
+
+    ``extra`` may carry a leading candidate axis (``valid`` of shape (C,)):
+    each candidate is refined under every inner and all compete in one
+    argmin, per-candidate validity masking each one independently. C == 1
+    and the axis-less form trace the same candidate order, so the single-hit
+    program is the legacy one.
     """
-    start = sanitize_start(params, extra)
+    multi = jnp.ndim(extra.valid) > 0
+    n_cand = int(extra.valid.shape[0]) if multi else 1
+    extras = (
+        [jax.tree.map(lambda x: x[c], extra) for c in range(n_cand)]
+        if multi
+        else [extra]
+    )
     inners = ("sca", "pgd") if cfg.inner == "auto" else (cfg.inner,)
-    cands = [
-        _solve_from(params, weights, cfg._replace(inner=inner), acc, start)
-        for inner in inners
-    ]
+    cands, valids = [], []
+    for inner in inners:
+        for e in extras:
+            start = sanitize_start(params, e)
+            cands.append(
+                _solve_from(params, weights, cfg._replace(inner=inner), acc, start)
+            )
+            valids.append(e.valid)
     results = [base] + cands
     if cfg.use_kernel_objective:
         stacked_allocs = jax.tree.map(
@@ -317,29 +340,37 @@ def refine_with_start(
         objs = candidate_objectives(params, weights, stacked_allocs, acc)
     else:
         objs = jnp.stack([objective(params, weights, r.alloc, acc) for r in results])
-    # candidates (every index > 0) only compete when the start was real AND
+    # candidates (every index > 0) only compete when their start was real AND
     # their objective is finite; the base result is never masked
     is_cand = jnp.arange(len(results)) > 0
-    ok = (extra.valid > 0.0) & jnp.isfinite(objs)
+    valid_vec = jnp.concatenate(
+        [jnp.ones((1,), jnp.float32), jnp.stack(valids).astype(jnp.float32)]
+    )
+    ok = (valid_vec > 0.0) & jnp.isfinite(objs)
     objs = jnp.where(is_cand & ~ok, jnp.inf, objs)
     best = jnp.argmin(objs)
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *results)
     return jax.tree.map(lambda x: x[best], stacked)
 
 
-def _solve_batch_impl(params_batch, weights, acc, cfg, weights_batched):
+def _solve_batch_impl(
+    params_batch, weights, acc, cfg, weights_batched, acc_batched=False
+):
     w_axis = 0 if weights_batched else None
+    a_axis = 0 if acc_batched else None
     return jax.vmap(
-        lambda p, w: solve(p, w, cfg, acc), in_axes=(0, w_axis)
-    )(params_batch, weights)
+        lambda p, w, a: solve(p, w, cfg, a), in_axes=(0, w_axis, a_axis)
+    )(params_batch, weights, acc)
 
 
 _solve_batch_jit = jax.jit(
-    _solve_batch_impl, static_argnames=("cfg", "weights_batched")
+    _solve_batch_impl, static_argnames=("cfg", "weights_batched", "acc_batched")
 )
 
 
-def _refine_batch_impl(params_batch, weights, acc, extra, base, cfg, weights_batched):
+def _refine_batch_impl(
+    params_batch, weights, acc, extra, base, cfg, weights_batched, acc_batched=False
+):
     """Per-scenario `refine_with_start` vmapped over the batch axis.
 
     ``base`` is the cold `solve_batch` result for the same batch; scenarios
@@ -348,45 +379,53 @@ def _refine_batch_impl(params_batch, weights, acc, extra, base, cfg, weights_bat
     perturbs the misses.
     """
     w_axis = 0 if weights_batched else None
+    a_axis = 0 if acc_batched else None
     return jax.vmap(
-        lambda p, w, e, b: refine_with_start(p, w, cfg, acc, e, b),
-        in_axes=(0, w_axis, 0, 0),
-    )(params_batch, weights, extra, base)
+        lambda p, w, a, e, b: refine_with_start(p, w, cfg, a, e, b),
+        in_axes=(0, w_axis, a_axis, 0, 0),
+    )(params_batch, weights, acc, extra, base)
 
 
 _refine_batch_jit = jax.jit(
-    _refine_batch_impl, static_argnames=("cfg", "weights_batched")
+    _refine_batch_impl, static_argnames=("cfg", "weights_batched", "acc_batched")
 )
 
 
 @functools.lru_cache(maxsize=None)
-def sharded_refine_solver(mesh, weights_batched: bool):
+def sharded_refine_solver(mesh, weights_batched: bool, acc_batched: bool = False):
     """Jitted `_refine_batch_impl` with the scenario axis sharded on ``mesh``
     (the warm-start sibling of `sharded_batch_solver`: extra starts and the
-    base result shard with the scenarios, the accuracy fit replicates)."""
+    base result shard with the scenarios; the accuracy fit shards with them
+    when ``acc_batched``, else replicates)."""
     from .distribute import replicated, scenario_sharding
 
     scen = scenario_sharding(mesh)
     rep = replicated(mesh)
     return jax.jit(
         _refine_batch_impl,
-        static_argnames=("cfg", "weights_batched"),
-        in_shardings=(scen, scen if weights_batched else rep, rep, scen, scen),
+        static_argnames=("cfg", "weights_batched", "acc_batched"),
+        in_shardings=(
+            scen,
+            scen if weights_batched else rep,
+            scen if acc_batched else rep,
+            scen,
+            scen,
+        ),
         out_shardings=scen,
     )
 
 
 @functools.lru_cache(maxsize=None)
-def sharded_batch_solver(mesh, weights_batched: bool):
+def sharded_batch_solver(mesh, weights_batched: bool, acc_batched: bool = False):
     """Jitted `solve_batch` body with the scenario axis sharded on ``mesh``.
 
     Explicit in/out shardings split every leading batch axis over the 1-D
     scenario mesh (`core.distribute`); the per-scenario solves are independent,
     so XLA partitions the program with no cross-device communication and each
-    device solves B/mesh.size scenarios. Cached per (mesh, weights_batched) —
-    `AllocatorConfig` stays a static jit arg, so one cache entry covers every
-    config. The jit object is also the serving layer's AOT entry point
-    (``.lower(...).compile()``).
+    device solves B/mesh.size scenarios. Cached per
+    (mesh, weights_batched, acc_batched) — `AllocatorConfig` stays a static
+    jit arg, so one cache entry covers every config. The jit object is also
+    the serving layer's AOT entry point (``.lower(...).compile()``).
     """
     from .distribute import replicated, scenario_sharding
 
@@ -394,8 +433,12 @@ def sharded_batch_solver(mesh, weights_batched: bool):
     rep = replicated(mesh)
     return jax.jit(
         _solve_batch_impl,
-        static_argnames=("cfg", "weights_batched"),
-        in_shardings=(scen, scen if weights_batched else rep, rep),
+        static_argnames=("cfg", "weights_batched", "acc_batched"),
+        in_shardings=(
+            scen,
+            scen if weights_batched else rep,
+            scen if acc_batched else rep,
+        ),
         out_shardings=scen,
     )
 
@@ -407,6 +450,7 @@ def solve_batch(
     accuracy: AccuracyFn | None = None,
     *,
     weights_batched: bool = False,
+    acc_batched: bool = False,
     mesh=None,
     extra_starts: ExtraStart | None = None,
 ) -> AllocatorResult:
@@ -427,15 +471,23 @@ def solve_batch(
     set, in which case its leaves must carry a matching leading B axis (used
     for weight sweeps, paper Fig. 3).
 
+    ``accuracy`` likewise broadcasts one A(rho) fit to every scenario unless
+    ``acc_batched`` is set, in which case its leaves must carry a matching
+    leading B axis (`stack_accuracy`) — one power-law fit per scenario, the
+    multi-tenant serving path. Rows are independent under vmap, so a uniform
+    stack matches the broadcast program and mixed stacks match per-row
+    as-if-alone solves, exactly (tests/test_multitenant_accuracy.py).
+
     ``mesh`` optionally shards the scenario axis across devices (a 1-D
     `core.distribute.scenario_mesh`): the same vmapped program compiles once
     with the batch split device_count ways and no cross-device communication.
     Batches not divisible by ``mesh.size`` are padded by replicating the tail
     scenario and sliced back — exact, since scenarios are independent.
 
-    ``extra_starts`` optionally injects one warm-start candidate per scenario
-    (an `ExtraStart` with leading-B leaves, e.g. `repro.serve.warmstart`
-    cache hits): the cold batch solves first through the UNCHANGED program,
+    ``extra_starts`` optionally injects warm-start candidate(s) per scenario
+    (an `ExtraStart` with leading-B leaves — optionally a (B, C) candidate
+    axis for top-k hits — e.g. `repro.serve.warmstart` cache lookups): the
+    cold batch solves first through the UNCHANGED program,
     then a second jitted pass (`_refine_batch_impl`) runs Alg. A2 from each
     valid start and keeps the per-scenario better of the two. ``None`` (the
     default) is exactly the cold program — bit-for-bit, which is the
@@ -461,23 +513,47 @@ def solve_batch(
                     "stack_weights(weights_list), or drop weights_batched to "
                     "broadcast one Weights to all scenarios."
                 )
+    if acc_batched:
+        b = params_batch.g.shape[0]
+        for path, leaf in jax.tree_util.tree_leaves_with_path(
+            accuracy if accuracy is not None else default_accuracy()
+        ):
+            shape = jnp.shape(leaf)
+            if len(shape) < 1 or shape[0] != b:
+                raise ValueError(
+                    "solve_batch(acc_batched=True) requires every accuracy "
+                    f"leaf to carry a leading batch axis of size B={b} matching "
+                    f"params_batch; leaf 'accuracy{jax.tree_util.keystr(path)}' "
+                    f"has shape {shape}. Stack per-scenario fits with "
+                    "stack_accuracy(acc_list), or drop acc_batched to "
+                    "broadcast one AccuracyFn to all scenarios."
+                )
     if extra_starts is not None:
         b = params_batch.g.shape[0]
         v = jnp.shape(extra_starts.valid)
-        if len(v) != 1 or v[0] != b:
+        if len(v) not in (1, 2) or v[0] != b:
             raise ValueError(
                 "solve_batch(extra_starts=...) requires extra_starts.valid of "
-                f"shape (B,) = ({b},) matching params_batch; got {v}. Stack "
-                "per-scenario warm starts with a leading batch axis "
-                "(repro.serve.warmstart builds these from cache hits)."
+                f"shape (B,) or (B, C) with B={b} matching params_batch; got "
+                f"{v}. Stack per-scenario warm starts with a leading batch "
+                "axis (repro.serve.warmstart builds these from cache hits)."
             )
     acc = accuracy or default_accuracy()
     if mesh is None:
-        base = _solve_batch_jit(params_batch, weights, acc, cfg, weights_batched)
+        base = _solve_batch_jit(
+            params_batch, weights, acc, cfg, weights_batched, acc_batched
+        )
         if extra_starts is None:
             return base
         return _refine_batch_jit(
-            params_batch, weights, acc, extra_starts, base, cfg, weights_batched
+            params_batch,
+            weights,
+            acc,
+            extra_starts,
+            base,
+            cfg,
+            weights_batched,
+            acc_batched,
         )
 
     from .distribute import pad_batch, round_up, slice_batch
@@ -488,14 +564,17 @@ def solve_batch(
         params_batch = pad_batch(params_batch, b_pad)
         if weights_batched:
             weights = pad_batch(weights, b_pad)
+        if acc_batched:
+            acc = pad_batch(acc, b_pad)
         if extra_starts is not None:
             extra_starts = pad_batch(extra_starts, b_pad)
-    res = sharded_batch_solver(mesh, weights_batched)(
-        params_batch, weights, acc, cfg, weights_batched
+    res = sharded_batch_solver(mesh, weights_batched, acc_batched)(
+        params_batch, weights, acc, cfg, weights_batched, acc_batched
     )
     if extra_starts is not None:
-        res = sharded_refine_solver(mesh, weights_batched)(
-            params_batch, weights, acc, extra_starts, res, cfg, weights_batched
+        res = sharded_refine_solver(mesh, weights_batched, acc_batched)(
+            params_batch, weights, acc, extra_starts, res, cfg, weights_batched,
+            acc_batched,
         )
     return slice_batch(res, b) if b_pad != b else res
 

@@ -102,6 +102,11 @@ def batch_objectives(
     the direct (un-vmapped) batched-kernel entry: the B scenarios land on the
     kernel's scenario grid axis with G = 1 candidate each. ``weights`` is
     broadcast unless ``weights_batched`` (leaves with a leading B axis).
+    ``accuracy`` likewise takes either one scalar fit (broadcast) or a
+    `stack_accuracy` batch with (B,) leaves — per-scenario accuracy
+    coefficients are runtime kernel inputs exactly like per-scenario kappas,
+    which is how the serving layer scores mixed-tenant flushes under each
+    row's own A(rho) fit.
     """
     from repro.kernels.fedsem_objective import ops
 

@@ -126,11 +126,26 @@ class ServiceBackend(AllocationBackend):
     allocation the training step sees is still hardened and feasible. Works
     with or without the service's own cache enabled (an explicit entry
     overrides the cache lookup).
+
+    ``tenant`` scopes this backend's accuracy feedback to ITS OWN rounds:
+    every submit carries the tenant id and `set_accuracy` updates only that
+    tenant's registry entry (`AllocService.set_accuracy(acc, tenant=...)`),
+    so concurrent jobs sharing one driver never see each other's refits —
+    bit-for-bit (the multi-tenant non-interference row,
+    tests/test_fl_backend.py and `fedsem_e2e`). None keeps the legacy
+    all-tenants default behaviour.
     """
 
     supports_accuracy_feedback = True
 
-    def __init__(self, target, *, timeout_s: float = 600.0, warm_rounds: bool = False):
+    def __init__(
+        self,
+        target,
+        *,
+        timeout_s: float = 600.0,
+        warm_rounds: bool = False,
+        tenant=None,
+    ):
         target = getattr(target, "driver", target)  # unwrap the asyncio facade
         if isinstance(target, RealClockDriver):
             self._driver: RealClockDriver | None = target
@@ -145,6 +160,7 @@ class ServiceBackend(AllocationBackend):
             )
         self._timeout_s = timeout_s
         self._warm_rounds = warm_rounds
+        self.tenant = tenant
         self._prev_alloc: Allocation | None = None
         self._scenarios: list[SystemParams] = []
         self._weights: Weights | None = None
@@ -168,11 +184,14 @@ class ServiceBackend(AllocationBackend):
         params = self._scenarios[rnd]
         warm = self._warm_entry(params)
         if self._driver is not None:
-            fut = self._driver.submit(params, self._weights, warm_start=warm)
+            fut = self._driver.submit(
+                params, self._weights, warm_start=warm, tenant=self.tenant
+            )
             alloc = fut.result(timeout=self._timeout_s).alloc
         else:
             req_id = self._service.submit(
-                params, self._weights, now=float(rnd), warm_start=warm
+                params, self._weights, now=float(rnd), warm_start=warm,
+                tenant=self.tenant,
             )
             done, _ = self._service.drain(now=float(rnd))
             alloc = next(c.alloc for c in done if c.req_id == req_id)
@@ -181,7 +200,7 @@ class ServiceBackend(AllocationBackend):
         return alloc
 
     def set_accuracy(self, acc) -> bool:
-        self._service.set_accuracy(acc)
+        self._service.set_accuracy(acc, tenant=self.tenant)
         return True
 
 

@@ -4,24 +4,35 @@ live allocation stack.
   PYTHONPATH=src python -m repro.launch.fedsem_e2e --smoke
   PYTHONPATH=src python -m repro.launch.fedsem_e2e --jobs 3 --rounds 6
 
-Three phases, one shared compiled-executable cache:
+Four phases, one shared compiled-executable cache:
 
 1. **Backend equivalence** (gates exit): for the same round scenarios and
    the same `AllocatorConfig`, the `ServiceBackend` over a virtual-clock
    `AllocService` must return the EXACT hardened assignment X that the
    offline `PlannedBackend` computes, round for round — the guarantee that
    routing `run_fl` through the serving stack changes scheduling, never
-   answers (`repro.fl.alloc_backend`).
+   answers (`repro.fl.alloc_backend`). Since the service rides accuracy as
+   a stacked per-row runtime argument, this is also the uniform-tenant
+   batched-acc == replicated-acc equivalence row, gated end to end.
 2. **Feedback loop** (gates exit): one `SemComJob` trains the real
    autoencoder over the virtual-clock service; its proxy-accuracy
    measurements must produce an applied A(rho) refit whose curve is
    monotone nondecreasing on a rho grid (Assumption 1 survives the refit).
 3. **Multi-job serving** (gates completeness only): J concurrent
    heterogeneous FL jobs — different scenario families (`hetero_classes`,
-   `gauss_markov`, ...), sizes and seeds — share ONE `RealClockDriver`;
-   their per-round requests co-batch inside the service and every job's
-   accuracy/energy trajectory plus the service-side p95/occupancy are
-   reported (`benchmarks.bench_fedsem` turns them into BENCH rows).
+   `gauss_markov`, ...), sizes and seeds — share ONE `RealClockDriver`,
+   each under its OWN tenant id; their per-round requests co-batch inside
+   the service and every job's accuracy/energy trajectory plus the
+   service-side p95/occupancy are reported (`benchmarks.bench_fedsem`
+   turns them into BENCH rows).
+4. **Multi-tenant non-interference** (gates exit): each phase-3 job is
+   re-run ALONE — same seed, same tenant id, a fresh virtual-clock service —
+   and its full trajectory (per-round loss/rho/energy/objective and every
+   proxy-accuracy measurement) must match its co-tenanted run exactly.
+   A(rho) refits are per-tenant runtime state and co-batched rows are
+   independent under vmap, so sharing a driver with other feedback-pushing
+   jobs changes NOTHING about a job's own answers — the mixed-tenant
+   as-if-alone equivalence row, gated end to end.
 
 Phases 1–2 run with ``feedback`` disabled where it would break determinism:
 a refit mid-run is the POINT of phase 2 but would make phase 1's planned
@@ -161,16 +172,24 @@ def run_refit_loop(
     }
 
 
+def tenant_id(job: SemComJob, i: int) -> str:
+    """One tenant id per concurrent job slot (names repeat when ``--jobs``
+    cycles the spec table, so the slot index disambiguates)."""
+    return f"{job.cfg.name}:{i}"
+
+
 def run_multijob(
     key: jax.Array, jobs: list[SemComJob], serve_cfg: ServeConfig,
     executables: dict,
 ) -> tuple[list[SemComJobResult], dict]:
-    """Phase 3: every job in its own thread, one shared `RealClockDriver`.
+    """Phase 3: every job in its own thread, one shared `RealClockDriver`,
+    each under its own tenant id.
 
     The service is warmed on each job's round-0 scenario first so the solver
     thread never pays a compile mid-serve; same-bucket jobs then co-batch.
-    Note the A(rho) refits the jobs push are service-global (one base
-    station, one accuracy belief) — co-tenants see each other's feedback.
+    The A(rho) refits the jobs push are PER-TENANT: each backend scopes its
+    `set_accuracy` to its own tenant registry entry, so co-tenants keep
+    their own beliefs (phase 4 gates this bit-for-bit).
     """
     warm = []
     for i, job in enumerate(jobs):
@@ -184,13 +203,55 @@ def run_multijob(
     with RealClockDriver(service) as driver:
         with ThreadPoolExecutor(max_workers=len(jobs)) as pool:
             futs = [
-                pool.submit(job.run, jax.random.fold_in(key, i), ServiceBackend(driver))
+                pool.submit(
+                    job.run,
+                    jax.random.fold_in(key, i),
+                    ServiceBackend(driver, tenant=tenant_id(job, i)),
+                )
                 for i, job in enumerate(jobs)
             ]
             results = [f.result() for f in futs]
         driver.close(timeout=600.0)
         summary = driver.summary()
     return results, summary
+
+
+def check_noninterference(
+    key: jax.Array, jobs: list[SemComJob], co_results: list[SemComJobResult],
+    serve_cfg: ServeConfig, executables: dict,
+) -> dict:
+    """Phase 4: re-run each phase-3 job ALONE (same seed/tenant, fresh
+    virtual-clock service) and require its trajectory to match the
+    co-tenanted run exactly — co-tenants' feedback must not leak.
+
+    Exactness is justified, not hoped for: a request solves and scores under
+    the A(rho) fit stamped at its OWN admission (per-tenant registry), and
+    co-batched rows are independent under vmap, so the only thing sharing a
+    driver changes is scheduling. ``key`` must be the phase-3 key (the solo
+    runs re-derive the same per-job fold)."""
+    per_job = []
+    for i, (job, co) in enumerate(zip(jobs, co_results)):
+        backend = ServiceBackend(
+            AllocService(serve_cfg, executables=executables),
+            tenant=tenant_id(job, i),
+        )
+        solo = job.run(jax.random.fold_in(key, i), backend)
+        rounds_equal = len(co.history) == len(solo.history) and all(
+            a.loss == b.loss and a.rho == b.rho and a.energy == b.energy
+            and a.t_fl == b.t_fl and a.objective == b.objective
+            for a, b in zip(co.history, solo.history)
+        )
+        meas_equal = co.measurements == solo.measurements
+        per_job.append(
+            {
+                "job": co.name,
+                "tenant": tenant_id(job, i),
+                "trajectory_equal": bool(rounds_equal),
+                "measurements_equal": bool(meas_equal),
+            }
+        )
+    ok = all(j["trajectory_equal"] and j["measurements_equal"] for j in per_job)
+    return {"jobs": per_job, "ok": bool(ok)}
 
 
 def trajectory(result: SemComJobResult) -> dict:
@@ -234,7 +295,7 @@ def main() -> int:
         jax.random.fold_in(key, 100), probe.cfg.fl, allocator, serve_cfg,
         d_bits, executables,
     )
-    print(f"[1/3] backend equivalence over {eq['rounds']} rounds: "
+    print(f"[1/4] backend equivalence over {eq['rounds']} rounds: "
           f"hardened X equal = {eq['hardened_x_equal']}, "
           f"rho allclose = {eq['rho_allclose']}")
 
@@ -243,31 +304,37 @@ def main() -> int:
         jax.random.fold_in(key, 200), make_job(specs[0], rounds, ae, batch, eval_batch),
         serve_cfg, executables,
     )
-    print(f"[2/3] refit: applied = {refit['refit_applied']} "
+    print(f"[2/4] refit: applied = {refit['refit_applied']} "
           f"(round {refit['refit_round']}), "
           f"A(rho) = {refit['fit_a']} * rho^{refit['fit_b']}, "
           f"monotone = {refit['fit_monotone']}")
 
     # phase 3: J heterogeneous jobs, one real-clock driver
+    key3 = jax.random.fold_in(key, 300)
     jobs = [make_job(s, rounds, ae, batch, eval_batch) for s in specs]
-    results, summary = run_multijob(
-        jax.random.fold_in(key, 300), jobs, serve_cfg, executables
-    )
+    results, summary = run_multijob(key3, jobs, serve_cfg, executables)
     completed = all(len(r.history) == rounds for r in results)
-    print(f"[3/3] {len(results)} concurrent jobs x {rounds} rounds over one "
+    print(f"[3/4] {len(results)} concurrent jobs x {rounds} rounds over one "
           f"driver: all completed = {completed}, "
           f"p95 latency = {summary.get('latency_p95_s', 0) * 1e3:.1f}ms, "
           f"occupancy = {summary.get('batch_occupancy_mean', 0):.2f}")
+
+    # phase 4: each job re-run alone must reproduce its co-tenanted
+    # trajectory exactly — per-tenant A(rho) refits never leak
+    nonint = check_noninterference(key3, jobs, results, serve_cfg, executables)
+    print(f"[4/4] multi-tenant non-interference over {len(jobs)} jobs: "
+          f"as-if-alone = {nonint['ok']}")
     print(json.dumps(
         {
             "equivalence": eq,
             "refit": refit,
             "jobs": [trajectory(r) for r in results],
+            "noninterference": nonint,
             "service": summary,
         },
         indent=2,
     ))
-    ok = eq["equivalent"] and refit["ok"] and completed
+    ok = eq["equivalent"] and refit["ok"] and completed and nonint["ok"]
     return 0 if ok else 1
 
 

@@ -61,18 +61,21 @@ class AsyncAllocDriver:
         params: SystemParams,
         weights: Weights | None = None,
         warm_start=None,
+        accuracy=None,
+        tenant=None,
     ) -> Completion:
         """Admit one scenario and await its `Completion`.
 
         Backpressure-safe: the blocking enqueue runs in the executor, and
         the solve itself is awaited through the driver's future — the event
         loop stays free for other coroutines while the solver thread works.
-        ``warm_start`` passes through to `RealClockDriver.submit` (an
-        explicit warm-start entry overriding any cache lookup).
+        ``warm_start``/``accuracy``/``tenant`` pass through to
+        `RealClockDriver.submit` (explicit warm-start entries overriding any
+        cache lookup; the per-tenant A(rho) fit stamped at prepare).
         """
         loop = asyncio.get_running_loop()
         fut = await loop.run_in_executor(
-            None, self.driver.submit, params, weights, warm_start
+            None, self.driver.submit, params, weights, warm_start, accuracy, tenant
         )
         return await asyncio.wrap_future(fut)
 

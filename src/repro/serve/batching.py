@@ -34,9 +34,15 @@ class PendingRequest:
     padded: SystemParams        # padded into the bucket (masks set)
     weights: Weights
     arrival_t: float
-    #: exact-shape warm-start candidate attached at `prepare` (a
-    #: `repro.serve.warmstart.CacheEntry` — cache hit or explicit caller
-    #: injection); None = cold request
+    #: the A(rho) fit this request solves AND scores under, resolved at
+    #: `prepare` (explicit arg > tenant registry > service default) — rides
+    #: the batch as one row of the stacked runtime accuracy argument, so
+    #: co-batched tenants with different beliefs never see each other's
+    #: model. None only for hand-built requests; the service always stamps it
+    accuracy: object | None = None
+    #: exact-shape warm-start candidate(s) attached at `prepare` (a
+    #: `repro.serve.warmstart.CacheEntry`, or a tuple of them for top-k
+    #: lookups — cache hit or explicit caller injection); None = cold request
     warm_start: object | None = None
     #: the request's warm-cache signature (computed once at `prepare`, reused
     #: to record the hardened solution after the flush); None when the

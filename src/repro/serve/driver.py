@@ -226,6 +226,8 @@ class RealClockDriver:
         params: SystemParams,
         weights: Weights | None = None,
         warm_start=None,
+        accuracy=None,
+        tenant=None,
     ) -> Future:
         """Admit one scenario from any thread; returns a Future resolving to
         its `Completion`.
@@ -234,14 +236,18 @@ class RealClockDriver:
         then enqueues on the bounded admission queue: blocks under
         backpressure when ``cfg.block`` (up to ``cfg.submit_timeout_s``),
         else raises `AdmissionQueueFull`. ``warm_start`` optionally injects
-        an explicit warm-start entry (`repro.serve.warmstart.CacheEntry`),
-        overriding any cache lookup — the FL backend's round-to-round reuse
-        and the replay gate use this; normal serving leaves it None and lets
-        the service's cache attach hits.
+        explicit warm-start entry/entries (`repro.serve.warmstart.CacheEntry`
+        or a tuple of them), overriding any cache lookup — the FL backend's
+        round-to-round reuse and the replay gate use this; normal serving
+        leaves it None and lets the service's cache attach hits.
+        ``accuracy``/``tenant`` select the A(rho) fit the request is stamped
+        with at prepare (`AllocService._resolve_accuracy`): per-tenant FL
+        jobs sharing this driver pass their tenant id so refits never touch
+        a co-tenant's requests.
         """
         if self._closed.is_set():
             raise DriverClosed("driver is closed; no further admissions")
-        prepared = self.service.prepare(params, weights, warm_start)
+        prepared = self.service.prepare(params, weights, warm_start, accuracy, tenant)
         fut: Future = Future()
         # re-check + enqueue under the fence: close() flips the flag under
         # the same lock, so a submit that slept through close() during the
@@ -270,14 +276,29 @@ class RealClockDriver:
             self.ladder.observe(params.N, params.K)
         return fut
 
+    def _cover_must_fit(self, must_fit) -> tuple[tuple[int, int], ...]:
+        """Union ``must_fit`` with the current ladder's cover shape so a refit
+        never shrinks coverage: any request admissible before the swap stays
+        admissible after it. Without this, a refit racing in-flight submitters
+        can learn a ladder from only the shapes observed SO FAR and a
+        concurrent admission of a not-yet-observed (but previously covered)
+        shape fails prepare with "no bucket fits"."""
+        current = self.service.cfg.buckets
+        if not current:
+            return tuple(must_fit)
+        cover = (max(b.N for b in current), max(b.K for b in current))
+        return tuple(must_fit) + (cover,)
+
     def refit(self, must_fit=()) -> LadderSnapshot:
         """Re-learn the bucket ladder from the shapes observed so far and
         swap it into the service (between-epochs hook; requires a
         `LadderLearner`). Safe while serving: queued requests keep their
-        admitted buckets, new admissions pad into the refit ladder."""
+        admitted buckets, new admissions pad into the refit ladder, and the
+        learned ladder always retains the current ladder's cover shape so
+        racing submitters of not-yet-observed shapes stay admissible."""
         if self.ladder is None:
             raise RuntimeError("RealClockDriver was built without a LadderLearner")
-        snap = self.ladder.refit(must_fit=must_fit)
+        snap = self.ladder.refit(must_fit=self._cover_must_fit(must_fit))
         # NamedTuple._replace-based swap is a single attribute store =>
         # atomic under the GIL; prepare() on caller threads sees either
         # ladder, and both pad into valid, solvable buckets
@@ -311,7 +332,7 @@ class RealClockDriver:
         self._next_refit_check = self._admitted + cfg.refit_check_every
         waste = LadderLearner._waste_or_inf(counts, current)
         if waste > cfg.refit_waste_threshold:
-            snap = self.ladder.refit()
+            snap = self.ladder.refit(must_fit=self._cover_must_fit(()))
             if tuple(snap.buckets) != tuple(current):
                 self.service.set_buckets(snap.buckets)
                 self.auto_refits += 1

@@ -62,15 +62,21 @@ def run_load(
     arrivals,
     weights: list[Weights] | None = None,
     warm_starts: list | None = None,
+    accuracies: list | None = None,
+    tenants: list | None = None,
 ) -> LoadResult:
     """Drive ``service`` with ``requests[i]`` arriving at ``arrivals[i]``.
 
     Returns every completion (the run always drains). ``weights`` optionally
     carries per-request objective weights; ``warm_starts`` optionally injects
-    an explicit warm-start entry per request (None entries stay cold) — this
+    explicit warm-start entries per request (None entries stay cold) — this
     is how a virtual replay reproduces a real-clock warm run exactly: cache
     contents are timing-dependent, so the replay re-injects the RECORDED
     `Completion.warm_start` entries instead of relying on its own cache.
+    ``accuracies``/``tenants`` optionally carry each request's A(rho) fit or
+    tenant id (`AllocService.prepare` resolution) so a mixed-tenant stream —
+    e.g. one recorded off a multi-job driver — replays each request under
+    the same belief it was originally solved with.
     """
     if len(requests) != len(arrivals):
         raise ValueError(
@@ -84,6 +90,14 @@ def run_load(
     if warm_starts is not None and len(warm_starts) != len(requests):
         raise ValueError(
             f"warm_starts ({len(warm_starts)}) and requests ({len(requests)}) differ"
+        )
+    if accuracies is not None and len(accuracies) != len(requests):
+        raise ValueError(
+            f"accuracies ({len(accuracies)}) and requests ({len(requests)}) differ"
+        )
+    if tenants is not None and len(tenants) != len(requests):
+        raise ValueError(
+            f"tenants ({len(tenants)}) and requests ({len(requests)}) differ"
         )
     arrivals = [float(t) for t in arrivals]
     if any(b < a for a, b in zip(arrivals, arrivals[1:])):
@@ -110,6 +124,8 @@ def run_load(
                 weights[i] if weights is not None else None,
                 now=arrivals[i],
                 warm_start=warm_starts[i] if warm_starts is not None else None,
+                accuracy=accuracies[i] if accuracies is not None else None,
+                tenant=tenants[i] if tenants is not None else None,
             )
             i += 1
         return i

@@ -21,6 +21,16 @@ fused call over the padded batch — `Completion.objective` reports the
 eq. 13 value of the returned allocation, equal to `system.objective` on the
 exact-shape scenario to float32 round-off.
 
+The A(rho) accuracy model is PER-REQUEST, not service-global: every request
+is stamped with its own `AccuracyFn` at `prepare` (explicit ``accuracy=``
+arg > per-tenant registry (`set_accuracy(acc, tenant=...)`) > the service
+default), the flush stacks the per-row fits (`stack_accuracy`) and the AOT
+executables take the stacked fit as a runtime argument
+(``exe(pb, wb, accb)``, `solve_batch(..., acc_batched=True)`), so co-batched
+tenants with different beliefs solve AND score under their own model in one
+program — a refit never recompiles and never touches a co-tenant's rows
+(the multi-tenant equivalence rows, tests/test_multitenant_accuracy.py).
+
 The service is sans-IO: callers pass ``now`` timestamps and decide when to
 flush (`flush_full` after submits, `flush_due` on timer ticks, `drain` at
 shutdown), which makes it drivable by a real clock (`repro.launch.serve_alloc`)
@@ -52,7 +62,7 @@ from repro.core import (
     tree_index,
     unpad_alloc,
 )
-from repro.core.accuracy import default_accuracy
+from repro.core.accuracy import AccuracyFn, default_accuracy, stack_accuracy
 from repro.core.allocator import (
     _refine_batch_jit,
     _solve_batch_impl,
@@ -138,11 +148,12 @@ class Completion(NamedTuple):
     #: True when this request rode a warm-start candidate (cache hit or
     #: explicit injection) into its flush
     warm_hit: bool = False
-    #: the exact-shape warm-start entry that rode along (None for a cold
-    #: request). Recorded so a virtual-clock replay can re-inject the SAME
-    #: starts explicitly — real==virtual equivalence stays exact even though
-    #: cache contents are timing-dependent (batch boundaries move)
-    warm_start: CacheEntry | None = None
+    #: the exact-shape warm-start entry (or tuple of entries, top-k) that
+    #: rode along (None for a cold request). Recorded so a virtual-clock
+    #: replay can re-inject the SAME starts explicitly — real==virtual
+    #: equivalence stays exact even though cache contents are
+    #: timing-dependent (batch boundaries move)
+    warm_start: CacheEntry | tuple | None = None
 
 
 class AllocService:
@@ -166,7 +177,10 @@ class AllocService:
         self.batcher = MicroBatcher(cfg.policy._replace(max_batch=self._full_slots))
         self.metrics = ServiceMetrics()
         self._executables = executables if executables is not None else {}
+        #: all-tenants default A(rho); per-tenant overrides live in
+        #: `_tenant_acc` and win for their own tenant's admissions
         self._acc = default_accuracy()
+        self._tenant_acc: dict = {}
         self._next_id = 0
         #: warm-start solution cache (None when disabled). Thread-safe on its
         #: own lock: `prepare` reads it from caller threads, the solver
@@ -207,11 +221,23 @@ class AllocService:
             padded.xi, padded.eta, padded.q,
         )
 
+    def _resolve_accuracy(self, accuracy=None, tenant=None) -> AccuracyFn:
+        """The A(rho) fit a request is stamped with at admission: an explicit
+        ``accuracy`` wins, else the ``tenant``'s registered fit
+        (`set_accuracy(acc, tenant=...)`), else the all-tenants default."""
+        if accuracy is not None:
+            return accuracy
+        if tenant is not None and tenant in self._tenant_acc:
+            return self._tenant_acc[tenant]
+        return self._acc
+
     def prepare(
         self,
         params: SystemParams,
         weights: Weights | None = None,
-        warm_start: CacheEntry | None = None,
+        warm_start=None,
+        accuracy: AccuracyFn | None = None,
+        tenant=None,
     ) -> PendingRequest:
         """Pad/canonicalise one scenario into its bucket WITHOUT touching any
         queue state (``req_id``/``arrival_t`` are placeholders until `admit`).
@@ -219,23 +245,34 @@ class AllocService:
         This is the pure, stateless half of admission: the real-clock driver
         runs it on the *caller's* thread, so the host-side padding work
         overlaps the solver thread's device solves (which release the GIL).
-        The warm-cache lookup happens here too (the cache has its own lock):
-        an explicit ``warm_start`` entry — e.g. the previous FL round's
-        solution, or a replay re-injecting a recorded hit — takes precedence
-        over whatever the cache holds."""
+        The request's A(rho) fit is resolved and STAMPED here
+        (`_resolve_accuracy`) — it rides the request to its flush, so a
+        `set_accuracy` racing the queue never re-steers or re-scores an
+        already-admitted request. The warm-cache lookup happens here too (the
+        cache has its own lock), keyed on the request's OWN fit: an explicit
+        ``warm_start`` entry (or tuple of entries) — e.g. the previous FL
+        round's solution, or a replay re-injecting recorded hits — takes
+        precedence over whatever the cache holds."""
         w = weights if weights is not None else Weights.ones()
+        acc = self._resolve_accuracy(accuracy, tenant)
         sig = None
         if self.warm_cache is not None:
-            sig = request_signature(params, w, self._acc, self.cfg.warmstart)
+            sig = request_signature(params, w, acc, self.cfg.warmstart)
         entry = warm_start
+        # CacheEntry IS a tuple (NamedTuple): only normalise genuine
+        # candidate lists, never a bare entry
+        if isinstance(entry, (list, tuple)) and not isinstance(entry, CacheEntry):
+            entry = tuple(entry) if entry else None
         if entry is None and self.warm_cache is not None:
-            entry = self.warm_cache.get(sig)
+            hits = self.warm_cache.lookup(sig, self.cfg.warmstart.top_k)
+            entry = hits[0] if len(hits) == 1 else (tuple(hits) or None)
         return PendingRequest(
             req_id=-1,
             params=params,
             padded=self._pad(params),
             weights=w,
             arrival_t=0.0,
+            accuracy=acc,
             warm_start=entry,
             warm_sig=sig,
         )
@@ -257,11 +294,17 @@ class AllocService:
         params: SystemParams,
         weights: Weights | None = None,
         now: float = 0.0,
-        warm_start: CacheEntry | None = None,
+        warm_start=None,
+        accuracy: AccuracyFn | None = None,
+        tenant=None,
     ) -> int:
         """Admit one scenario; returns its request id. Does not solve — call
-        `flush_full` / `flush_due` / `drain` to get completions."""
-        return self.admit(self.prepare(params, weights, warm_start), now)
+        `flush_full` / `flush_due` / `drain` to get completions.
+        ``accuracy``/``tenant`` select the A(rho) fit the request solves
+        under (see `prepare`)."""
+        return self.admit(
+            self.prepare(params, weights, warm_start, accuracy, tenant), now
+        )
 
     def set_buckets(self, buckets: tuple[ShapeBucket, ...] | None) -> None:
         """Swap the bucket ladder (e.g. a learned `repro.serve.ladder` refit
@@ -272,26 +315,36 @@ class AllocService:
         flush (old entries stay valid)."""
         self.cfg = self.cfg._replace(buckets=buckets)
 
-    def set_accuracy(self, acc) -> None:
-        """Swap the A(rho) model every subsequent flush solves against (e.g.
-        an `AccuracyFn` re-fit from a SemCom job's own proxy-accuracy
+    def set_accuracy(self, acc, tenant=None) -> None:
+        """Update the A(rho) model subsequent ADMISSIONS are stamped with
+        (e.g. an `AccuracyFn` re-fit from a SemCom job's own proxy-accuracy
         measurements — the FedSem feedback edge, `repro.fl.semcom_job`).
 
-        Zero recompiles: the accuracy fit is a runtime argument of every
-        compiled executable, not part of its cache key, so the swap is a
-        single attribute store (atomic under the GIL, same safety argument
-        as `set_buckets`). Already-queued requests solve under the NEW model
-        at their flush — the model is service-global, which is the point
-        (one base station, one accuracy belief) but means co-tenant jobs on
-        a shared driver also see the refit.
+        With ``tenant`` the refit scopes to that tenant's registry entry:
+        only requests admitted under the same tenant id (or with this fit
+        passed explicitly) see it — co-tenants on a shared driver keep their
+        own beliefs, bit-for-bit (the multi-tenant non-interference row).
+        Without ``tenant`` the all-tenants DEFAULT is swapped — the legacy
+        service-global behaviour, which unregistered-tenant requests keep
+        getting unchanged (the compatibility shim, pinned by regression).
+
+        Zero recompiles either way: the stacked per-row fit is a runtime
+        argument of every compiled executable, not part of its cache key, so
+        a refit is a dict/attribute store (atomic under the GIL, same safety
+        argument as `set_buckets`). Requests stamp their fit at `prepare` —
+        already-queued requests solve and score under the model they were
+        admitted with, not the refit.
 
         Warm-start cache entries recorded under the OLD model stay valid and
         need no invalidation: a hit is only ever a *start point* — the refine
-        pass re-solves and re-scores it under whatever model is current, so
+        pass re-solves and re-scores it under the rider's current fit, so
         a stale entry competes on the new objective and can only help or tie
         (regression-tested in tests/test_warmstart.py).
         """
-        self._acc = acc
+        if tenant is None:
+            self._acc = acc
+        else:
+            self._tenant_acc[tenant] = acc
 
     def pending(self) -> int:
         return self.batcher.depth()
@@ -315,20 +368,21 @@ class AllocService:
             return -(-n_real // n_dev) * n_dev
         return n_real
 
-    def _place(self, params_batch, weights_batch):
-        """Commit a flush's inputs to the mesh (scenario-sharded batch axis,
-        replicated accuracy fit) so AOT executables see the shardings they
-        were compiled for. No-op placement cost on a single device."""
+    def _place(self, params_batch, weights_batch, acc_batch):
+        """Commit a flush's inputs to the mesh (scenario-sharded batch axis —
+        including the stacked per-row accuracy fit, whose leaves are (B,))
+        so AOT executables see the shardings they were compiled for. No-op
+        placement cost on a single device."""
         if self.mesh is None:
-            return params_batch, weights_batch, self._acc
+            return params_batch, weights_batch, acc_batch
         scen = scenario_sharding(self.mesh)
         return (
             jax.device_put(params_batch, scen),
             jax.device_put(weights_batch, scen),
-            jax.device_put(self._acc, replicated(self.mesh)),
+            jax.device_put(acc_batch, scen),
         )
 
-    def _solver(self, key: tuple, slots: int, params_batch, weights_batch):
+    def _solver(self, key: tuple, slots: int, params_batch, weights_batch, acc_batch):
         # AllocatorConfig AND the mesh are part of the key: a shared
         # `executables` dict must never hand config A's solver to a service
         # running config B, nor a single-device program to a sharded service
@@ -339,11 +393,11 @@ class AllocService:
             jitted = (
                 _solve_batch_jit
                 if self.mesh is None
-                else sharded_batch_solver(self.mesh, True)
+                else sharded_batch_solver(self.mesh, True, True)
             )
-            pb, wb, acc = self._place(params_batch, weights_batch)
+            pb, wb, accb = self._place(params_batch, weights_batch, acc_batch)
             t0 = time.perf_counter()
-            exe = jitted.lower(pb, wb, acc, cfg, True).compile()
+            exe = jitted.lower(pb, wb, accb, cfg, True, True).compile()
             self._executables[cache_key] = exe
             self.metrics.observe_cache(hit=False, compile_s=time.perf_counter() - t0)
         else:
@@ -357,34 +411,40 @@ class AllocService:
             return jax.tree.map(jax.numpy.asarray, extra)
         return jax.device_put(extra, scenario_sharding(self.mesh))
 
-    def _refiner(self, key: tuple, slots: int, pb, wb, extra):
-        """AOT-compiled warm-refine executable for one (bucket, slots) pair —
-        the second program of a warm flush: takes the cold result plus the
-        flush's `ExtraStart` batch and returns the per-scenario better of the
-        two (`core.allocator._refine_batch_impl`). Cached beside the cold
-        executables under a distinct key so cold-only services never pay its
-        compile, and flushes with zero hits never run it."""
-        cache_key = (key, slots, self.cfg.allocator, self.mesh, "warm-refine")
+    def _refiner(self, key: tuple, slots: int, pb, wb, accb, extra):
+        """AOT-compiled warm-refine executable for one (bucket, slots,
+        candidate-count) triple — the second program of a warm flush: takes
+        the cold result plus the flush's `ExtraStart` batch and returns the
+        per-scenario best (`core.allocator._refine_batch_impl`). Cached
+        beside the cold executables under a distinct key so cold-only
+        services never pay its compile, and flushes with zero hits never run
+        it. Single-candidate flushes ((B,)-valid `ExtraStart`) and top-k
+        flushes ((B, top_k)) are different programs; `batch_starts` pads
+        every multi-candidate flush to exactly ``top_k`` candidates, so a
+        service compiles at most two refine programs per bucket."""
+        n_cand = 1 if np.ndim(extra.valid) == 1 else int(extra.valid.shape[1])
+        cache_key = (key, slots, self.cfg.allocator, self.mesh, "warm-refine", n_cand)
         exe = self._executables.get(cache_key)
         if exe is None:
             cfg = self.cfg.allocator
             jitted = (
                 _refine_batch_jit
                 if self.mesh is None
-                else sharded_refine_solver(self.mesh, True)
+                else sharded_refine_solver(self.mesh, True, True)
             )
-            pb, wb, acc = self._place(pb, wb)
+            pb, wb, accb = self._place(pb, wb, accb)
             extra = self._place_extra(extra)
             # the cold result's abstract shape is all lowering needs — no
             # solve happens here, so compile time stays out of solve_s
             base = jax.eval_shape(
                 functools.partial(
-                    _solve_batch_impl, cfg=cfg, weights_batched=True
+                    _solve_batch_impl, cfg=cfg, weights_batched=True,
+                    acc_batched=True,
                 ),
-                pb, wb, acc,
+                pb, wb, accb,
             )
             t0 = time.perf_counter()
-            exe = jitted.lower(pb, wb, acc, extra, base, cfg, True).compile()
+            exe = jitted.lower(pb, wb, accb, extra, base, cfg, True, True).compile()
             self._executables[cache_key] = exe
             self.metrics.observe_cache(hit=False, compile_s=time.perf_counter() - t0)
         else:
@@ -409,9 +469,10 @@ class AllocService:
         for key, padded in seen.items():
             pb = stack_params([padded] * slots)
             wb = stack_weights([Weights.ones()] * slots)
-            self._solver(key, slots, pb, wb)
+            accb = stack_accuracy([self._acc] * slots)
+            self._solver(key, slots, pb, wb, accb)
             if self.cfg.warmstart is not None:
-                # pre-compile the warm-refine program too (a placeholder
+                # pre-compile the warm-refine program(s) too (a placeholder
                 # entry fixes the shapes; contents are irrelevant to tracing)
                 dummy = CacheEntry(
                     f=0.5 * np.asarray(padded.f_max, dtype=np.float32),
@@ -422,7 +483,16 @@ class AllocService:
                 extra = batch_starts(
                     [dummy] + [None] * (slots - 1), [padded] * slots
                 )
-                self._refiner(key, slots, pb, wb, extra)
+                self._refiner(key, slots, pb, wb, accb, extra)
+                top_k = self.cfg.warmstart.top_k
+                if top_k > 1:
+                    # top-k flushes run the (B, top_k)-candidate program
+                    extra_k = batch_starts(
+                        [[dummy] * top_k] + [None] * (slots - 1),
+                        [padded] * slots,
+                        k=top_k,
+                    )
+                    self._refiner(key, slots, pb, wb, accb, extra_k)
 
     # -- flushing ------------------------------------------------------------
 
@@ -435,30 +505,40 @@ class AllocService:
         filled = pending + [pending[-1]] * (slots - n_real)
         pb = stack_params([r.padded for r in filled])
         wb = stack_weights([r.weights for r in filled])
-        exe = self._solver(key, slots, pb, wb)
+        # each row rides ITS OWN A(rho) fit (stamped at `prepare`) as one row
+        # of the stacked runtime accuracy argument — mixed-tenant co-batching
+        # solves and scores every request under its own belief
+        accb = stack_accuracy(
+            [r.accuracy if r.accuracy is not None else self._acc for r in filled]
+        )
+        exe = self._solver(key, slots, pb, wb, accb)
         # one ExtraStart batch for the flush iff ANY rider has a warm start
         # (`batch_starts` returns None otherwise): a hitless flush runs the
         # UNCHANGED cold executable only — the cold==disabled equivalence row
         # holds per flush, not just per service
         extra = batch_starts(
-            [r.warm_start for r in filled], [r.padded for r in filled]
+            [r.warm_start for r in filled],
+            [r.padded for r in filled],
+            k=self.cfg.warmstart.top_k if self.cfg.warmstart is not None else None,
         )
         if extra is not None:
-            refine = self._refiner(key, slots, pb, wb, extra)
+            refine = self._refiner(key, slots, pb, wb, accb, extra)
             extra = self._place_extra(extra)
-        pb, wb, acc = self._place(pb, wb)
+        pb, wb, accb = self._place(pb, wb, accb)
         t0 = time.perf_counter()
         if extra is None:
-            res = jax.block_until_ready(exe(pb, wb, acc))
+            res = jax.block_until_ready(exe(pb, wb, accb))
         else:
-            base = exe(pb, wb, acc)
-            res = jax.block_until_ready(refine(pb, wb, acc, extra, base))
+            base = exe(pb, wb, accb)
+            res = jax.block_until_ready(refine(pb, wb, accb, extra, base))
         solve_s = time.perf_counter() - t0
         self.metrics.observe_batch(n_real, slots, solve_s)
         # score the padded batch through the batched kernel in one fused call
-        # (outside solve_s: diagnostics, not solver latency)
+        # (outside solve_s: diagnostics, not solver latency) — under the same
+        # per-row fits the rows were SOLVED with, so a `set_accuracy` racing
+        # an in-flight flush can never mis-report `Completion.objective`
         objs = (
-            np.asarray(_score_flush(pb, wb, res.alloc, self._acc))
+            np.asarray(_score_flush(pb, wb, res.alloc, accb))
             if self.cfg.score_objective
             else None
         )

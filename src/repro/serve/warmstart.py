@@ -68,6 +68,13 @@ class WarmStartConfig(NamedTuple):
     #: relative tolerance declaring the objective trace "converged" for the
     #: solve-iteration-savings metric (`iters_to_converge`)
     iters_rtol: float = 1e-3
+    #: warm-start candidates fed per request: 1 (default) attaches the exact
+    #: signature hit only — the legacy single-candidate program, bit-for-bit.
+    #: k > 1 additionally attaches up to k-1 nearest quantized-signature
+    #: NEIGHBOURS (`WarmStartCache.lookup`: same signature except the gain
+    #: steps, ranked by L1 gain-step distance) and the refine pass argmins
+    #: over the whole candidate list — dominance still holds per candidate
+    top_k: int = 1
 
 
 class CacheEntry(NamedTuple):
@@ -164,6 +171,45 @@ class WarmStartCache:
             self.hits += 1
             return entry
 
+    def lookup(self, sig: tuple, k: int | None = None) -> list[CacheEntry]:
+        """Up to ``k`` warm-start candidates for ``sig``, best first.
+
+        ``k`` defaults to ``cfg.top_k``. With ``k == 1`` this is exactly
+        `get` (exact-signature hit or nothing — the legacy path, same LRU
+        refresh and hit/miss accounting). With ``k > 1`` the exact hit (if
+        any) leads and the remainder are the nearest NEIGHBOURS: entries
+        whose signature matches in every component except the quantized gain
+        steps, ranked by L1 distance over those steps. Neighbour reads do
+        not refresh recency (they are speculative candidates, not uses of
+        their own key) and the call still counts one hit/miss: a lookup is a
+        hit iff it returns any candidate.
+        """
+        if k is None:
+            k = self.cfg.top_k
+        if k <= 1:
+            entry = self.get(sig)
+            return [entry] if entry is not None else []
+        with self._lock:
+            out = []
+            exact = self._entries.get(sig)
+            if exact is not None:
+                self._entries.move_to_end(sig)
+                out.append(exact)
+            ref_gains = sig[7]
+            scored = []
+            for other, entry in self._entries.items():
+                if other == sig or other[:7] != sig[:7] or other[8:] != sig[8:]:
+                    continue
+                dist = sum(abs(a - b) for a, b in zip(ref_gains, other[7]))
+                scored.append((dist, other, entry))
+            scored.sort(key=lambda t: (t[0], t[1]))
+            out.extend(e for _, _, e in scored[: k - len(out)])
+            if out:
+                self.hits += 1
+            else:
+                self.misses += 1
+            return out
+
     def put(self, sig: tuple, entry: CacheEntry) -> None:
         with self._lock:
             self.puts += 1
@@ -218,33 +264,84 @@ def pad_start(entry: CacheEntry, padded: SystemParams) -> tuple:
 
 
 def batch_starts(
-    entries: list, padded_list: list
+    entries: list, padded_list: list, k: int | None = None
 ) -> ExtraStart | None:
     """Stack per-slot cache hits into the `ExtraStart` batch `solve_batch`
-    consumes; ``entries[i] is None`` marks a miss (placeholder arrays,
-    ``valid`` 0 — the refine pass returns that row's cold result
-    bit-for-bit). Returns None when every slot missed, which tells the
-    service to run the PLAIN cold executable — the cold==disabled row."""
-    if all(e is None for e in entries):
+    consumes; ``entries[i]`` is None (miss), one `CacheEntry`, or a
+    list/tuple of candidates (`WarmStartCache.lookup` top-k). Misses get
+    placeholder arrays with ``valid`` 0 — the refine pass returns that row's
+    cold result bit-for-bit. Returns None when every slot missed, which
+    tells the service to run the PLAIN cold executable — the cold==disabled
+    row.
+
+    Shape discipline keeps the compiled-program count bounded: when every
+    slot holds at most ONE candidate the legacy (B,)-valid layout is
+    emitted (bit-compatible with the single-candidate refine program);
+    otherwise candidates pad to a (B, C) axis with C = ``k`` when given
+    (so every multi-candidate flush of a service shares one program) else
+    the flush's max candidate count.
+    """
+    # NB: CacheEntry IS a tuple (NamedTuple) — test it first or a single
+    # entry would explode into its four field arrays
+    norm = [
+        []
+        if e is None
+        else [e]
+        if isinstance(e, CacheEntry)
+        else list(e)
+        if isinstance(e, (list, tuple))
+        else [e]
+        for e in entries
+    ]
+    c_max = max((len(c) for c in norm), default=0)
+    if c_max == 0:
         return None
+    if c_max <= 1:
+        fs, Ps, Xs, valid = [], [], [], []
+        for cands, padded in zip(norm, padded_list):
+            if not cands:
+                fs.append(0.5 * np.asarray(padded.f_max, dtype=np.float32))
+                Ps.append(np.zeros((padded.N, padded.K), dtype=np.float32))
+                Xs.append(np.zeros((padded.N, padded.K), dtype=np.float32))
+                valid.append(0.0)
+            else:
+                f, P, X = pad_start(cands[0], padded)
+                fs.append(f)
+                Ps.append(P)
+                Xs.append(X)
+                valid.append(1.0)
+        return ExtraStart(
+            f=np.stack(fs),
+            P=np.stack(Ps),
+            X=np.stack(Xs),
+            valid=np.asarray(valid, dtype=np.float32),
+        )
+    C = max(c_max, k or 0)
     fs, Ps, Xs, valid = [], [], [], []
-    for entry, padded in zip(entries, padded_list):
-        if entry is None:
-            fs.append(0.5 * np.asarray(padded.f_max, dtype=np.float32))
-            Ps.append(np.zeros((padded.N, padded.K), dtype=np.float32))
-            Xs.append(np.zeros((padded.N, padded.K), dtype=np.float32))
-            valid.append(0.0)
-        else:
-            f, P, X = pad_start(entry, padded)
-            fs.append(f)
-            Ps.append(P)
-            Xs.append(X)
-            valid.append(1.0)
+    for cands, padded in zip(norm, padded_list):
+        row_f, row_P, row_X, row_v = [], [], [], []
+        for c in range(C):
+            if c < len(cands):
+                f, P, X = pad_start(cands[c], padded)
+                v = 1.0
+            else:
+                f = 0.5 * np.asarray(padded.f_max, dtype=np.float32)
+                P = np.zeros((padded.N, padded.K), dtype=np.float32)
+                X = np.zeros((padded.N, padded.K), dtype=np.float32)
+                v = 0.0
+            row_f.append(f)
+            row_P.append(P)
+            row_X.append(X)
+            row_v.append(v)
+        fs.append(np.stack(row_f))
+        Ps.append(np.stack(row_P))
+        Xs.append(np.stack(row_X))
+        valid.append(np.asarray(row_v, dtype=np.float32))
     return ExtraStart(
         f=np.stack(fs),
         P=np.stack(Ps),
         X=np.stack(Xs),
-        valid=np.asarray(valid, dtype=np.float32),
+        valid=np.stack(valid),
     )
 
 

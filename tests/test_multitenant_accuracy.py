@@ -1,0 +1,284 @@
+"""Multi-tenant A(rho): per-request batched accuracy, asserted bit-for-bit.
+
+The tentpole guarantees (docs/ARCHITECTURE.md equivalence table):
+
+* UNIFORM stack == replicated scalar: `solve_batch(..., acc_batched=True)`
+  over `stack_accuracy([fit] * B)` returns exactly what the legacy
+  replicated-scalar program returns — every leaf, not just hardened X.
+* MIXED stack == as-if-alone: a row co-batched with OTHER tenants' fits is
+  bit-identical to the same row in a batch where every row carries its own
+  fit. vmap rows are independent, so another tenant's belief can never leak
+  into this tenant's answer.
+
+Both are exercised at three layers — raw allocator (`solve_batch`), sans-IO
+service (admission stamps the fit at `prepare`), and the threaded real-clock
+driver (tenant registry) — with a hypothesis sweep over random per-row fits,
+including identical-fit rows co-batched with distinct-fit rows (the dedup
+temptation the design rejects: stamping per row keeps the program count at
+one regardless of fit mix).
+
+Plus the two service-lifecycle regressions that motivated the refactor:
+
+* `_score_flush` race: a `set_accuracy` landing between admission and flush
+  must not re-score in-flight completions — `Completion.objective` reflects
+  the fit the request was STAMPED with, not the global at flush time.
+* zero recompiles per refit: A(rho) is a runtime argument, so `set_accuracy`
+  (global or per-tenant) never grows the executable cache.
+"""
+import hypothesis
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    AllocatorConfig,
+    Weights,
+    sample_params,
+    solve,
+    solve_batch,
+    stack_accuracy,
+    stack_params,
+    tree_index,
+)
+from repro.core.accuracy import AccuracyFn, default_accuracy
+from repro.core.pgd import PGDConfig
+from repro.core.system import feasible, objective
+from repro.serve import AllocService, BatchPolicy, RealClockDriver, ServeConfig
+
+SHIM = getattr(hypothesis, "__version__", "") == "0.0.0-fedsem-shim"
+N_EXAMPLES = 40 if SHIM else 120
+
+W = Weights.ones()
+TINY = AllocatorConfig(inner="pgd", outer_iters=2, pgd=PGDConfig(steps=40))
+SERVE = ServeConfig(policy=BatchPolicy(max_batch=2, max_wait_s=0.01), allocator=TINY)
+#: one fixed shape across the whole module: every test and every hypothesis
+#: example reuses the same compiled programs (shared executables fixture)
+N, K = 3, 8
+WAIT_S = 120.0
+
+
+def fit(a: float, b: float) -> AccuracyFn:
+    return AccuracyFn(jnp.float32(a), jnp.float32(b))
+
+
+def params_for(seed: int):
+    return sample_params(jax.random.PRNGKey(seed), N=N, K=K)
+
+
+def assert_alloc_equal(x, y):
+    """Bit-for-bit on every allocation leaf — the equivalences are exact."""
+    for name in ("f", "P", "X", "rho"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(x, name)), np.asarray(getattr(y, name)), err_msg=name
+        )
+
+
+@pytest.fixture(scope="module")
+def executables():
+    return {}
+
+
+# ---------------------------------------------------------------------------
+# allocator layer
+# ---------------------------------------------------------------------------
+
+
+def test_uniform_stack_matches_replicated_scalar():
+    """Equivalence row 1: stacking one fit B times and running the batched-acc
+    program == broadcasting the scalar fit (the legacy program), exactly."""
+    pb = stack_params([params_for(s) for s in (0, 1, 2)])
+    acc = fit(0.6, 0.35)
+    batched = solve_batch(pb, W, TINY, stack_accuracy([acc] * 3), acc_batched=True)
+    scalar = solve_batch(pb, W, TINY, acc)
+    assert_alloc_equal(batched.alloc, scalar.alloc)
+    np.testing.assert_array_equal(
+        np.asarray(batched.trace), np.asarray(scalar.trace)
+    )
+
+
+def test_mixed_stack_rows_as_if_alone():
+    """Equivalence row 2: each co-batched row is bit-identical to the same row
+    in a batch where EVERY row carries that row's fit — other tenants' fits
+    cannot leak across vmap rows."""
+    scenarios = [params_for(s) for s in (3, 4, 5)]
+    fits = [fit(0.45, 0.55), fit(0.7, 0.2), fit(0.55, 0.45)]
+    pb = stack_params(scenarios)
+    mixed = solve_batch(pb, W, TINY, stack_accuracy(fits), acc_batched=True)
+    for i, (p, f) in enumerate(zip(scenarios, fits)):
+        alone = solve_batch(pb, W, TINY, stack_accuracy([f] * 3), acc_batched=True)
+        assert_alloc_equal(
+            tree_index(mixed.alloc, i), tree_index(alone.alloc, i)
+        )
+        # and the hardened assignment agrees with an unbatched solve under
+        # that fit (fp-exact on the discrete decision, like the weights row)
+        ref = jax.jit(lambda q, a: solve(q, W, TINY, a))(p, f)
+        np.testing.assert_array_equal(
+            np.asarray(tree_index(mixed.alloc.X, i)), np.asarray(ref.alloc.X)
+        )
+        assert bool(feasible(p, tree_index(mixed.alloc, i)))
+
+
+def test_acc_batched_rejects_scalar_and_wrong_batch():
+    pb = stack_params([params_for(0)] * 3)
+    with pytest.raises(ValueError, match="leading batch axis"):
+        solve_batch(pb, W, TINY, fit(0.5, 0.5), acc_batched=True)
+    with pytest.raises(ValueError, match="size B=3"):
+        solve_batch(pb, W, TINY, stack_accuracy([fit(0.5, 0.5)] * 2), acc_batched=True)
+
+
+@settings(max_examples=N_EXAMPLES, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    a0=st.floats(min_value=0.3, max_value=0.9),
+    b0=st.floats(min_value=0.1, max_value=0.9),
+    a1=st.floats(min_value=0.3, max_value=0.9),
+    b1=st.floats(min_value=0.1, max_value=0.9),
+    dup=st.booleans(),
+)
+def test_prop_allocator_mixed_rows_as_if_alone(seed, a0, b0, a1, b1, dup):
+    """Property: for random scenarios and random per-row fits — including a
+    duplicated fit co-batched with a distinct one (``dup``) — every row of the
+    mixed-acc solve equals its row in the own-fit-everywhere solve, exactly."""
+    scenarios = [params_for(seed), params_for(seed + 1)]
+    fits = [fit(a0, b0), fit(a0, b0) if dup else fit(a1, b1)]
+    pb = stack_params(scenarios)
+    mixed = solve_batch(pb, W, TINY, stack_accuracy(fits), acc_batched=True)
+    for i, f in enumerate(fits):
+        alone = solve_batch(pb, W, TINY, stack_accuracy([f] * 2), acc_batched=True)
+        assert_alloc_equal(tree_index(mixed.alloc, i), tree_index(alone.alloc, i))
+
+
+# ---------------------------------------------------------------------------
+# service layer: stamping at prepare
+# ---------------------------------------------------------------------------
+
+
+def _solo_alloc(p, acc, executables):
+    """What a tenant would get from a service all to itself."""
+    service = AllocService(SERVE, executables=executables)
+    service.submit(p, accuracy=acc, now=0.0)
+    done, _ = service.drain(now=0.0)
+    return done[0]
+
+
+@settings(max_examples=max(10, N_EXAMPLES // 4), deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    a0=st.floats(min_value=0.3, max_value=0.9),
+    b0=st.floats(min_value=0.1, max_value=0.9),
+    a1=st.floats(min_value=0.3, max_value=0.9),
+    b1=st.floats(min_value=0.1, max_value=0.9),
+    dup=st.booleans(),
+)
+def test_prop_service_cobatch_as_if_alone(
+    executables, seed, a0, b0, a1, b1, dup
+):
+    """Two tenants' requests co-batched by the micro-batcher each get the
+    answer a solo service would give them — bit-for-bit, including the scored
+    objective (the padded-batch scorer uses the same stamped per-row fits)."""
+    p0, p1 = params_for(seed), params_for(seed + 1)
+    f0 = fit(a0, b0)
+    f1 = f0 if dup else fit(a1, b1)
+    service = AllocService(SERVE, executables=executables)
+    service.submit(p0, accuracy=f0, now=0.0)
+    service.submit(p1, accuracy=f1, now=0.0)
+    (c0, c1), _ = service.flush_full(now=0.0)
+    for c, p, f in ((c0, p0, f0), (c1, p1, f1)):
+        solo = _solo_alloc(p, f, executables)
+        assert_alloc_equal(c.alloc, solo.alloc)
+        assert c.objective == solo.objective
+        # the scored objective is the eq. 13 value under the STAMPED fit
+        ref = float(objective(p, W, c.alloc, f))
+        assert c.objective == pytest.approx(ref, abs=1e-4 * max(1.0, abs(ref)))
+
+
+def test_tenant_registry_stamps_at_prepare(executables):
+    """Requests resolve explicit > tenant registry > global default, and the
+    stamp happens at admission: a later registry update must not re-steer an
+    already-queued request."""
+    p = params_for(42)
+    service = AllocService(SERVE, executables=executables)
+    f_a, f_b = fit(0.7, 0.2), fit(0.4, 0.7)
+    service.set_accuracy(f_a, tenant="a")
+    service.submit(p, tenant="a", now=0.0)
+    service.set_accuracy(f_b, tenant="a")      # lands AFTER admission
+    service.submit(p, tenant="a", now=0.0)
+    (c_old, c_new), _ = service.flush_full(now=0.0)
+    assert_alloc_equal(c_old.alloc, _solo_alloc(p, f_a, executables).alloc)
+    assert_alloc_equal(c_new.alloc, _solo_alloc(p, f_b, executables).alloc)
+
+
+def test_score_flush_uses_stamped_fit_not_flush_time_global(executables):
+    """THE `_score_flush` race regression: a global refit landing between
+    admission and flush used to re-score the in-flight batch under the NEW
+    model (solve and score disagreed). Both now read the request's stamp."""
+    p = params_for(43)
+    service = AllocService(SERVE, executables=executables)
+    stamped = default_accuracy()
+    service.submit(p, now=0.0)                 # stamped with the default
+    service.set_accuracy(fit(0.2, 0.9))        # divergent refit mid-flight
+    service.submit(p, now=0.0)                 # stamped with the refit
+    (c_old, c_new), _ = service.flush_full(now=0.0)
+    ref_old = float(objective(p, W, c_old.alloc, stamped))
+    ref_new = float(objective(p, W, c_new.alloc, fit(0.2, 0.9)))
+    assert c_old.objective == pytest.approx(
+        ref_old, abs=1e-4 * max(1.0, abs(ref_old))
+    )
+    assert c_new.objective == pytest.approx(
+        ref_new, abs=1e-4 * max(1.0, abs(ref_new))
+    )
+    # and the old request's answer is the pre-refit answer
+    assert_alloc_equal(c_old.alloc, _solo_alloc(p, stamped, executables).alloc)
+
+
+def test_refit_adds_zero_recompiles(executables):
+    """A(rho) rides the batch as a runtime argument: refits — global or
+    per-tenant, however many — never mint a new executable."""
+    p = params_for(44)
+    service = AllocService(SERVE, executables=executables)
+    service.warmup([p])
+    n_exe, misses = len(service.executables), service.metrics.cache_misses
+    for i in range(4):
+        service.set_accuracy(fit(0.3 + 0.1 * i, 0.8 - 0.1 * i))
+        service.set_accuracy(fit(0.9 - 0.1 * i, 0.1 + 0.1 * i), tenant=f"t{i}")
+        service.submit(p, tenant=f"t{i}", now=float(i))
+        service.submit(p, now=float(i))
+        done, _ = service.drain(now=float(i))
+        assert len(done) == 2
+    assert len(service.executables) == n_exe
+    assert service.metrics.cache_misses == misses
+
+
+# ---------------------------------------------------------------------------
+# driver layer: tenant registry over the threaded real-clock path
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=max(8, N_EXAMPLES // 5), deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    a0=st.floats(min_value=0.3, max_value=0.9),
+    b0=st.floats(min_value=0.1, max_value=0.9),
+    a1=st.floats(min_value=0.3, max_value=0.9),
+    b1=st.floats(min_value=0.1, max_value=0.9),
+)
+def test_prop_driver_tenants_as_if_alone(executables, seed, a0, b0, a1, b1):
+    """Through the threaded driver: two tenants with registered fits each get
+    the solo-service answer for their own fit, whatever co-batching the
+    micro-batcher happened to do."""
+    p0, p1 = params_for(seed), params_for(seed + 1)
+    f0, f1 = fit(a0, b0), fit(a1, b1)
+    service = AllocService(SERVE, executables=executables)
+    service.set_accuracy(f0, tenant="t0")
+    service.set_accuracy(f1, tenant="t1")
+    with RealClockDriver(service) as driver:
+        fut0 = driver.submit(p0, tenant="t0")
+        fut1 = driver.submit(p1, tenant="t1")
+        c0 = fut0.result(timeout=WAIT_S)
+        c1 = fut1.result(timeout=WAIT_S)
+    for c, p, f in ((c0, p0, f0), (c1, p1, f1)):
+        assert_alloc_equal(c.alloc, _solo_alloc(p, f, executables).alloc)
+        assert bool(feasible(p, c.alloc))

@@ -313,6 +313,28 @@ def test_driver_refit_swaps_ladder_mid_stream():
     assert all(c.bucket in {(b.N, b.K) for b in snap.buckets} for c in done)
 
 
+def test_driver_refit_never_shrinks_coverage():
+    """A mid-stream refit that has only observed part of the mix must keep
+    every previously-admissible shape admissible: the learned ladder retains
+    the current ladder's cover shape. Without that, a (4, 8) submitter racing
+    a refit that had only seen (3, 8) died at prepare with "no bucket fits"
+    (the deterministic replay of the threaded-stress interleave)."""
+    small = sample_request_stream(jax.random.PRNGKey(11), 2, sizes=((3, 8),))
+    big = sample_request_stream(jax.random.PRNGKey(12), 1, sizes=((4, 8),))
+    service = AllocService(CFG)
+    service.warmup(small + big)
+    with RealClockDriver(service, ladder=LadderLearner(min_samples=1)) as driver:
+        [f.result(timeout=WAIT_S) for f in (driver.submit(p) for p in small)]
+        snap = driver.refit()           # learner has ONLY seen (3, 8)
+        cover = (
+            max(b.N for b in DEFAULT_BUCKETS),
+            max(b.K for b in DEFAULT_BUCKETS),
+        )
+        assert any(b.fits(*cover) for b in snap.buckets)
+        c = driver.submit(big[0]).result(timeout=WAIT_S)   # used to ValueError
+    assert c.alloc.P.shape == (4, 8)
+
+
 def test_driver_refit_requires_learner():
     service = AllocService(CFG)
     with RealClockDriver(service) as driver:

@@ -290,6 +290,196 @@ def test_signature_collides_on_similar_channels_and_splits_on_shape():
     assert request_signature(p4, W, ACC, wcfg) != sig1
 
 
+def _sig_with_gains(gains: tuple) -> tuple:
+    """A synthetic signature matching `request_signature`'s layout: 7 exact
+    components, the quantized gain steps at index 7, then acc/weights."""
+    return (3, 6, 1.0, 2.0, 3.0, 4.0, 5.0, gains, (0.5, 0.5), (1.0, 1.0, 1.0))
+
+
+def test_lookup_k1_is_get():
+    """``lookup(sig, 1)`` is exactly `get`: same answer, same LRU refresh,
+    same hit/miss accounting — the legacy single-candidate path."""
+    cache = WarmStartCache(WarmStartConfig())
+    sig = _sig_with_gains((0, 0, 0))
+    assert cache.lookup(sig, 1) == []
+    assert cache.stats()["warm_cache_misses"] == 1
+    e = _entry()
+    cache.put(sig, e)
+    assert cache.lookup(sig, 1) == [e]
+    assert cache.stats()["warm_cache_hits"] == 1
+
+
+def test_lookup_topk_ranks_neighbours_by_gain_distance():
+    """k > 1: the exact hit leads, then neighbours — same signature except
+    the gain steps — ranked by L1 step distance; entries differing in any
+    OTHER component (shape, accuracy, weights) are never candidates."""
+    cache = WarmStartCache(WarmStartConfig(top_k=3))
+    exact = _sig_with_gains((0, 0, 0))
+    near = _sig_with_gains((1, 0, 0))      # L1 distance 1
+    far = _sig_with_gains((3, -2, 0))      # L1 distance 5
+    other_acc = exact[:8] + ((0.9, 0.1),) + exact[9:]
+    e_exact, e_near, e_far, e_other = (_entry(fill=v) for v in (0.1, 0.2, 0.3, 0.4))
+    cache.put(far, e_far)
+    cache.put(near, e_near)
+    cache.put(exact, e_exact)
+    cache.put(other_acc, e_other)
+    hits = cache.lookup(exact)              # k defaults to cfg.top_k
+    assert hits == [e_exact, e_near, e_far]
+    assert cache.stats()["warm_cache_hits"] == 1   # ONE lookup, one hit
+    # k caps the candidate list
+    assert cache.lookup(exact, 2) == [e_exact, e_near]
+    # neighbours alone still count as a (speculative) hit
+    cache2 = WarmStartCache(WarmStartConfig(top_k=3))
+    cache2.put(near, e_near)
+    assert cache2.lookup(exact) == [e_near]
+    assert cache2.stats()["warm_cache_hits"] == 1
+    # empty cache: one miss for the whole lookup
+    cache3 = WarmStartCache(WarmStartConfig(top_k=3))
+    assert cache3.lookup(exact) == []
+    assert cache3.stats()["warm_cache_misses"] == 1
+
+
+def test_lookup_neighbours_do_not_refresh_recency():
+    """A neighbour read must not refresh the neighbour's LRU slot — it is a
+    speculative candidate, not a use of its own key."""
+    cache = WarmStartCache(WarmStartConfig(capacity=2, top_k=2))
+    near = _sig_with_gains((1, 0, 0))
+    exact = _sig_with_gains((0, 0, 0))
+    cache.put(near, _entry(fill=0.2))
+    cache.put(exact, _entry(fill=0.1))
+    cache.lookup(exact)                     # touches `near` as a neighbour
+    cache.put(_sig_with_gains((5, 5, 5)), _entry(fill=0.3))
+    assert cache.get(near) is None          # evicted: recency NOT refreshed
+    assert cache.get(exact) is not None
+
+
+def test_batch_starts_multi_candidate_shapes():
+    """Candidate lists pad to a (B, C) axis with per-candidate valid; a
+    single bare `CacheEntry` (which IS a tuple — the regression) stays the
+    legacy (B,) layout."""
+    from repro.core import pad_params
+
+    padded = pad_params(_scenario(0), ShapeBucket(PROP_N, PROP_K))
+    # bare entries only -> legacy (B,) layout even when the service's k > 1
+    legacy = batch_starts([_entry(), None], [padded] * 2)
+    assert legacy.valid.shape == (2,)
+    assert legacy.f.shape == (2, PROP_N)
+    # a two-candidate slot, padded to k=3 programs-stay-bounded width
+    extra = batch_starts(
+        [[_entry(fill=0.2), _entry(fill=0.4)], None], [padded] * 2, k=3
+    )
+    assert extra.valid.shape == (2, 3)
+    assert extra.f.shape == (2, 3, PROP_N)
+    np.testing.assert_array_equal(
+        np.asarray(extra.valid), [[1.0, 1.0, 0.0], [0.0, 0.0, 0.0]]
+    )
+    np.testing.assert_array_equal(extra.f[0, 1], _entry(fill=0.4).f)
+    # miss slots carry the inert placeholder (f = f_max/2, P = X = 0)
+    np.testing.assert_array_equal(
+        extra.f[1, 0], 0.5 * np.asarray(padded.f_max, np.float32)
+    )
+    np.testing.assert_array_equal(extra.P[1], 0.0)
+
+
+def test_single_candidate_axis_is_bitforbit_legacy():
+    """(B, 1) candidate-axis ExtraStart == the legacy (B,) layout through
+    `solve_batch`, every leaf — the refine program's C=1 compatibility row."""
+    params = _scenario(21)
+    donor = _cold(params)
+    f0 = np.asarray(donor.alloc.f[0], np.float32)
+    P0 = np.asarray(donor.alloc.P[0], np.float32)
+    X0 = np.asarray(donor.alloc.X[0], np.float32)
+    legacy = solve_batch(
+        stack_params([params]), W, TINY, extra_starts=_extra_from(f0, P0, X0)
+    )
+    multi = solve_batch(
+        stack_params([params]), W, TINY,
+        extra_starts=ExtraStart(
+            f=f0[None, None], P=P0[None, None], X=X0[None, None],
+            valid=np.ones((1, 1), np.float32),
+        ),
+    )
+    for a, b in zip(jax.tree.leaves(legacy), jax.tree.leaves(multi)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.slow
+@settings(max_examples=max(20, N_EXAMPLES // 4), deadline=None)
+@given(
+    scenario_seed=st.integers(min_value=0, max_value=10_000),
+    donor_seed=st.integers(min_value=0, max_value=10_000),
+    garbage_mode=st.sampled_from(["nan", "scaled", "zeros"]),
+)
+def test_topk_candidates_dominance_property(scenario_seed, donor_seed, garbage_mode):
+    """Dominance extends per candidate: a (B, C) start carrying the row's own
+    prior solution PLUS an adversarial neighbour (garbage / mis-scaled /
+    zeros, as `lookup` might speculatively attach) still answers <= cold and
+    hardened — no candidate can hurt, however wrong."""
+    params = _scenario(scenario_seed)
+    base = _cold(params)
+    cold_obj = _obj(params, tree_index(base.alloc, 0))
+    f0 = np.asarray(base.alloc.f[0], np.float32)
+    P0 = np.asarray(base.alloc.P[0], np.float32)
+    X0 = np.asarray(base.alloc.X[0], np.float32)
+    if garbage_mode == "nan":
+        f1, P1, X1 = np.full_like(f0, np.nan), P0 * 1e12, np.full_like(X0, np.nan)
+    elif garbage_mode == "scaled":
+        donor = _cold(_scenario(donor_seed + 20_000))
+        f1 = np.asarray(donor.alloc.f[0], np.float32) * 1e6
+        P1 = np.asarray(donor.alloc.P[0], np.float32) * 1e6
+        X1 = np.asarray(donor.alloc.X[0], np.float32)
+    else:
+        f1, P1, X1 = np.zeros_like(f0), np.zeros_like(P0), np.zeros_like(X0)
+    extra = ExtraStart(
+        f=np.stack([f0, f1])[None],
+        P=np.stack([P0, P1])[None],
+        X=np.stack([X0, X1])[None],
+        valid=np.ones((1, 2), np.float32),
+    )
+    warm = solve_batch(stack_params([params]), W, TINY, extra_starts=extra)
+    warm_alloc = tree_index(warm.alloc, 0)
+    warm_obj = _obj(params, warm_alloc)
+    assert warm_obj <= cold_obj + _tol(cold_obj), (
+        f"top-k dominance violated ({garbage_mode}): {warm_obj} > {cold_obj}"
+    )
+    X = np.asarray(warm_alloc.X)
+    assert set(np.unique(X)) <= {0.0, 1.0}
+    assert (X.sum(axis=0) == 1.0).all()
+    assert (X.sum(axis=1) >= 1.0).all()
+
+
+def test_service_topk_attaches_neighbours_and_bounds_programs():
+    """End to end with ``top_k=2``: a drifted re-request hits its neighbour,
+    dominance holds, and the executable cache holds at most TWO refine
+    programs for the bucket (C=1 legacy + C=top_k) however the fill mix
+    varies."""
+    import dataclasses
+
+    wcfg = WarmStartConfig(top_k=2, gain_quant_db=3.0)
+    svc = AllocService(CFG_COLD._replace(warmstart=wcfg))
+    params = _stream(1, seed=17, sizes=((3, 8),))[0]
+    svc.submit(params)
+    first, _ = svc.drain(now=0.0)
+    # drift the channel past one quantization step: exact key misses, the
+    # neighbour search finds the recorded entry
+    drifted = dataclasses.replace(params, g=params.g * 10.0 ** (4.5 / 10.0))
+    assert request_signature(drifted, W, ACC, wcfg) != request_signature(
+        params, W, ACC, wcfg
+    )
+    svc.submit(drifted)
+    second, _ = svc.drain(now=1.0)
+    assert second[0].warm_hit
+    cold_svc = AllocService(CFG_COLD, executables=svc.executables)
+    cold_svc.submit(drifted)
+    cold_done, _ = cold_svc.drain(now=0.0)
+    o_cold = cold_done[0].objective
+    assert second[0].objective <= o_cold + _tol(o_cold)
+    refine_keys = [k for k in svc.executables if "warm-refine" in k]
+    assert len(refine_keys) <= 2
+    cands = {k[-1] for k in refine_keys}
+    assert cands <= {1, 2}
+
+
 def test_iters_to_converge():
     assert iters_to_converge([5.0, 2.0, 1.0, 1.0], rtol=1e-3) == 3
     assert iters_to_converge([1.0, 1.0, 1.0], rtol=1e-3) == 1
